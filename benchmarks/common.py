@@ -1,0 +1,67 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each benchmark prints a CSV block; ``benchmarks.run`` aggregates them all.
+Defaults (T=1500, seeds=5) keep a full sweep CPU-tractable while clearly
+separating the policies (the paper uses T=3000, 10 seeds).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import bandit, metrics, rewards as R
+from repro.core.policies import PolicyConfig
+from repro.env.llm_profiles import (CHATGLM2, GPT4, Pool, default_rho,
+                                    paper_pool)
+
+T_DEFAULT = 1200
+SEEDS_DEFAULT = 4
+N_DEFAULT = 4
+
+# the §6 ablation parameter pairs (α_μ, α_c), labelled (a)-(d)
+PARAM_SETTINGS = {"a": (0.3, 0.05), "b": (1.0, 0.05),
+                  "c": (0.3, 0.01), "d": (1.0, 0.01)}
+BASELINES: Tuple[Tuple[str, dict], ...] = (
+    ("cucb", {}), ("thompson", {}), ("egreedy", {}),
+    ("always_gpt4", {"_policy": "fixed", "arm": GPT4}),
+    ("always_cheap", {"_policy": "fixed", "arm": CHATGLM2}),
+)
+
+
+def run_one(policy: str, pool: Pool, kind: str, *, n: int = N_DEFAULT,
+            rho: Optional[float] = None, T: int = T_DEFAULT,
+            seeds: int = SEEDS_DEFAULT, alpha_mu: float = 0.3,
+            alpha_c: float = 0.05, sync_every: int = 1,
+            **kw) -> Dict[str, float]:
+    rho = default_rho(pool, kind, n) if rho is None else rho
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=n, rho=rho, delta=1.0 / T,
+                        alpha_mu=alpha_mu, alpha_c=alpha_c)
+    t0 = time.time()
+    res = bandit.simulate(policy, pool, pcfg, T=T, seeds=seeds,
+                          sync_every=sync_every, **kw)
+    dt = time.time() - t0
+    r_opt = bandit.optimal_value(pool, pcfg)
+    out = metrics.summarize(res.reward, res.cost, rho,
+                            r_opt, float(R.ALPHA[kind]))
+    out.update(runtime_s=dt, rho=rho, r_opt=r_opt)
+    return out
+
+
+def run_baselines(pool: Pool, kind: str, **kw) -> List[Tuple[str, Dict]]:
+    rows = []
+    for name, bkw in BASELINES:
+        bkw = dict(bkw)
+        policy = bkw.pop("_policy", name)
+        rows.append((name, run_one(policy, pool, kind, **bkw, **kw)))
+    return rows
+
+
+def fmt_row(name: str, s: Dict[str, float]) -> str:
+    return (f"{name},{s['reward_mean']:.4f},{s['violation_final']:.4f},"
+            f"{s['ratio_final']:.2f},{s['regret_final']:.1f},"
+            f"{s['runtime_s']:.1f}")
+
+
+HEADER = "policy,reward_mean,violation_final,ratio_final,regret_final,runtime_s"

@@ -1,0 +1,45 @@
+"""Baseline vs optimized dry-run comparison table (EXPERIMENTS.md §Perf
+summary). Reads artifacts/dryrun_baseline (paper-faithful substrate) and
+artifacts/dryrun (current defaults: EP MoE dispatch, flash-decode
+constraints, buffer donation)."""
+import glob
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def rows(mesh="pod256"):
+    base_dir = os.path.join(ROOT, "dryrun_baseline", mesh)
+    opt_dir = os.path.join(ROOT, "dryrun", mesh)
+    out = []
+    for f in sorted(glob.glob(os.path.join(opt_dir, "*.json"))):
+        b_path = os.path.join(base_dir, os.path.basename(f))
+        if not os.path.exists(b_path):
+            continue
+        o = json.load(open(f))
+        b = json.load(open(b_path))
+        if o == b:
+            continue   # untouched case
+        out.append((b, o))
+    return out
+
+
+def main():
+    print("| arch | shape | t_coll base→opt (s) | t_mem base→opt (s) | "
+          "peak base→opt (GiB) |")
+    print("|---|---|---|---|---|")
+    for b, o in rows():
+        tc_b, tc_o = b["collective_bytes"] / ICI_BW, o["collective_bytes"] / ICI_BW
+        tm_b, tm_o = b["bytes_accessed"] / HBM_BW, o["bytes_accessed"] / HBM_BW
+        pk_b = b["memory"]["peak_bytes"] / 2**30
+        pk_o = o["memory"]["peak_bytes"] / 2**30
+        print(f"| {b['arch']} | {b['shape']} | "
+              f"{tc_b:.3g} → {tc_o:.3g} | {tm_b:.3g} → {tm_o:.3g} | "
+              f"{pk_b:.2f} → {pk_o:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

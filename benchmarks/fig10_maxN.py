@@ -1,0 +1,19 @@
+"""Fig. 10: impact of the maximum number of selectable LLMs N (AWC)."""
+from benchmarks import common
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    rho = common.default_rho(pool, "awc", 4)   # fixed budget as in the paper
+    print("# fig10: varying maximum number N (AWC, fixed rho)")
+    print("N," + common.HEADER)
+    for n in (2, 3, 4, 5, 6):
+        for policy, kw in (("c2mabv", {"alpha_mu": 0.3, "alpha_c": 0.01}),
+                           ("cucb", {}), ("egreedy", {})):
+            s = common.run_one(policy, pool, "awc", n=n, rho=rho, T=T,
+                               seeds=seeds, **kw)
+            print(f"{n}," + common.fmt_row(policy, s))
+
+
+if __name__ == "__main__":
+    main()

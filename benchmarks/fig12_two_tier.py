@@ -1,0 +1,24 @@
+"""Fig. 12: two-tier (one big + one small LLM) vs multi-tier selection."""
+import numpy as np
+
+from benchmarks import common
+from repro.env.llm_profiles import CHATGLM2, GPT4, Pool
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    full = common.paper_pool("sciq")
+    two = Pool(names=(full.names[CHATGLM2], full.names[GPT4]),
+               mu=full.mu[[CHATGLM2, GPT4]],
+               mean_cost=full.mean_cost[[CHATGLM2, GPT4]],
+               cost_scale=full.cost_scale)
+    print("# fig12: two-tier vs multi-tier (AWC)")
+    print("pool," + common.HEADER)
+    s = common.run_one("c2mabv", two, "awc", n=2, T=T, seeds=seeds)
+    print("two_tier," + common.fmt_row("c2mabv", s))
+    s = common.run_one("c2mabv", full, "awc", n=common.N_DEFAULT, T=T,
+                       seeds=seeds)
+    print("multi_tier," + common.fmt_row("c2mabv", s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fig. 13: offline-learned fixed multi-LLM combination applied online vs
+the online C2MAB-V (the necessity-of-online-learning experiment).
+
+The offline set is learned on a *different* scenario ('math'), then applied
+to the 'sciq' query stream — the paper's data-drift story."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import relax
+from repro.env.llm_profiles import paper_pool
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    offline_env = paper_pool("math")   # what the offline phase saw
+    online_env = paper_pool("sciq")    # what production serves
+    rho = common.default_rho(online_env, "awc", common.N_DEFAULT)
+    mask, _ = relax.solve_direct("awc", offline_env.mu,
+                                 offline_env.mean_cost,
+                                 common.N_DEFAULT, rho)
+    print("# fig13: offline-fixed combination vs online C2MAB-V (AWC)")
+    print(common.HEADER)
+    s = common.run_one("offline_fixed", online_env, "awc", rho=rho, T=T,
+                       seeds=seeds, mask=np.asarray(mask, float))
+    print(common.fmt_row("offline_fixed", s))
+    s = common.run_one("c2mabv", online_env, "awc", rho=rho, T=T,
+                       seeds=seeds)
+    print(common.fmt_row("c2mabv_online", s))
+
+
+if __name__ == "__main__":
+    main()

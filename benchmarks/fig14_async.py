@@ -1,0 +1,16 @@
+"""Fig. 14: asynchronous local-cloud sync with batch sizes 10/50/100/200."""
+from benchmarks import common
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    print("# fig14: async local-cloud batch size (AWC)")
+    print("batch," + common.HEADER)
+    for b in (1, 10, 50, 100, 200):
+        s = common.run_one("c2mabv", pool, "awc", T=T, seeds=seeds,
+                           sync_every=b)
+        print(f"{b}," + common.fmt_row("c2mabv", s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Fig. 4: reward/violation ratio for the three task types (AWC/SUC/AIC),
+C2MAB-V under four (α_μ, α_c) settings vs the §6 baselines."""
+from benchmarks import common
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    print("# fig4: reward/violation ratio (higher is better)")
+    print("task," + common.HEADER)
+    for kind in ("awc", "suc", "aic"):
+        for tag, (am, ac) in common.PARAM_SETTINGS.items():
+            s = common.run_one("c2mabv", pool, kind, alpha_mu=am,
+                               alpha_c=ac, T=T, seeds=seeds)
+            print(f"{kind}," + common.fmt_row(f"c2mabv({tag})", s))
+        for name, s in common.run_baselines(pool, kind, T=T, seeds=seeds):
+            print(f"{kind}," + common.fmt_row(name, s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 6 + Fig. 7: per-round reward and per-round violation curves
+(checkpointed at T/8, T/4, T/2, T) for C2MAB-V(c) and baselines."""
+import numpy as np
+
+from benchmarks import common
+from repro.core import bandit, metrics
+from repro.core.policies import PolicyConfig
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    pts = [T // 8, T // 4, T // 2, T - 1]
+    print("# fig6/7: reward and violation at round checkpoints")
+    print("task,policy," + ",".join(f"reward@{p+1}" for p in pts) + ","
+          + ",".join(f"V@{p+1}" for p in pts))
+    for kind in ("awc", "suc", "aic"):
+        rho = common.default_rho(pool, kind, common.N_DEFAULT)
+        pcfg = PolicyConfig(kind=kind, k=pool.k, n=common.N_DEFAULT,
+                            rho=rho, delta=1.0 / T, alpha_mu=0.3,
+                            alpha_c=0.01)
+        rows = [("c2mabv(c)", "c2mabv", {}), ("cucb", "cucb", {}),
+                ("thompson", "thompson", {}), ("egreedy", "egreedy", {})]
+        for label, policy, kw in rows:
+            res = bandit.simulate(policy, pool, pcfg, T=T, seeds=seeds, **kw)
+            t_ax = np.arange(1, T + 1)
+            avg_r = np.cumsum(res.reward, -1) / t_ax
+            v = metrics.violation_curve(res.cost, rho)
+            rv = ",".join(f"{avg_r[:, p].mean():.4f}" for p in pts)
+            vv = ",".join(f"{v[:, p].mean():.4f}" for p in pts)
+            print(f"{kind},{label},{rv},{vv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 8: reward/violation ratio across budget thresholds ρ."""
+from benchmarks import common
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    print("# fig8: ratio across budget thresholds (AWC)")
+    print("rho," + common.HEADER)
+    base = common.default_rho(pool, "awc", common.N_DEFAULT)
+    for mult in (0.8, 1.0, 1.3, 1.7, 2.2):
+        rho = base * mult
+        s = common.run_one("c2mabv", pool, "awc", rho=rho, alpha_mu=1.0,
+                           alpha_c=0.01, T=T, seeds=seeds)
+        print(f"{rho:.3f}," + common.fmt_row("c2mabv(d)", s))
+        for policy in ("cucb", "egreedy"):
+            s = common.run_one(policy, pool, "awc", rho=rho, T=T,
+                               seeds=seeds)
+            print(f"{rho:.3f}," + common.fmt_row(policy, s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Fig. 9: performance-driven vs cost-driven parameterizations of C2MAB-V."""
+from benchmarks import common
+
+VARIANTS = {
+    "performance1": (0.3, 1.0),
+    "performance2": (1.0, 1.0),
+    "cost1": (0.3, 0.01),
+    "cost2": (1.0, 0.01),
+}
+
+
+def main(T=common.T_DEFAULT, seeds=common.SEEDS_DEFAULT):
+    pool = common.paper_pool("sciq")
+    print("# fig9: performance- vs cost-driven variants (AWC)")
+    print(common.HEADER)
+    for name, (am, ac) in VARIANTS.items():
+        s = common.run_one("c2mabv", pool, "awc", alpha_mu=am, alpha_c=ac,
+                           T=T, seeds=seeds)
+        print(common.fmt_row(name, s))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts. §Perf is maintained by hand (the hypothesis log)."""
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze, load
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.2f} {unit}"
+        b /= 1024
+    return f"{b:.2f} PiB"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [f"### Mesh `{mesh}` "
+           f"({'2x16x16 = 512 chips' if mesh == 'pod512' else '16x16 = 256 chips'})",
+           "",
+           "| arch | shape | compile s | FLOPs/chip | bytes/chip | "
+           "collective B/chip | peak HBM/chip | fits 16 GiB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        peak = r["memory"]["peak_bytes"]
+        fits = "yes" if peak <= 16 * 2**30 else "**NO**"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+            f"{r['flops']:.3g} | {r['bytes_accessed']:.3g} | "
+            f"{r['collective_bytes']:.3g} | {fmt_bytes(peak)} | {fits} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [f"### Roofline `{mesh}`", "",
+           "| arch | shape | t_compute | t_memory | t_collective | dominant "
+           "| useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        a = analyze(r)
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.2e} | "
+            f"{a['t_memory_s']:.2e} | {a['t_collective_s']:.2e} | "
+            f"{a['dominant']} | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    print(dryrun_table("pod256"))
+    print()
+    print(dryrun_table("pod512"))
+    print()
+    print(roofline_table("pod256"))
+    print()
+    print(roofline_table("pod512"))
+
+
+if __name__ == "__main__":
+    main()

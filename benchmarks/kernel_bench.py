@@ -1,0 +1,59 @@
+"""Kernel micro-bench: interpret-mode correctness cost + XLA-oracle timing.
+
+On CPU the Pallas kernels run in interpret mode (Python), so wall-clock is a
+correctness-path number, not a TPU projection; the jnp oracle timing is the
+XLA-compiled CPU reference. Both are printed per shape.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def bench(fn, *args, iters=3):
+    fn(*args)                      # warm up / compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e3
+
+
+def main():
+    k0 = jax.random.PRNGKey(0)
+    print("# kernel_bench: ms/call (interpret-mode kernel vs jnp oracle)")
+    print("kernel,shape,pallas_interpret_ms,jnp_oracle_ms")
+
+    for (b, h, kv, s, d) in [(1, 8, 2, 512, 64), (2, 16, 4, 1024, 128)]:
+        q = jax.random.normal(k0, (b, h, s, d))
+        k = jax.random.normal(jax.random.fold_in(k0, 1), (b, kv, s, d))
+        v = jax.random.normal(jax.random.fold_in(k0, 2), (b, kv, s, d))
+        t1 = bench(lambda: ops.flash_attention(q, k, v, bq=128, bk=128))
+        t2 = bench(lambda: ref.flash_attention(q, k, v))
+        print(f"flash_attention,B{b}H{h}KV{kv}S{s}D{d},{t1:.1f},{t2:.1f}")
+
+    for (b, h, kv, t, d) in [(8, 8, 2, 2048, 64), (4, 16, 4, 8192, 128)]:
+        q = jax.random.normal(k0, (b, 1, h, d))
+        kc = jax.random.normal(jax.random.fold_in(k0, 1), (b, t, kv, d))
+        vc = jax.random.normal(jax.random.fold_in(k0, 2), (b, t, kv, d))
+        pos = jnp.int32(t - 1)
+        t1 = bench(lambda: ops.decode_attention(q, kc, vc, pos, bk=512))
+        t2 = bench(lambda: ref.decode_attention(q, kc, vc, pos))
+        print(f"decode_attention,B{b}H{h}KV{kv}T{t}D{d},{t1:.1f},{t2:.1f}")
+
+    for (b, nc, l, h, p, n) in [(1, 8, 128, 8, 64, 64)]:
+        xd = jax.random.normal(k0, (b, nc, l, h, p))
+        a = -jnp.abs(jax.random.normal(jax.random.fold_in(k0, 1),
+                                       (b, nc, l, h))) * 0.1
+        acum = jnp.cumsum(a, axis=2)
+        bm = jax.random.normal(jax.random.fold_in(k0, 2), (b, nc, l, n))
+        cm = jax.random.normal(jax.random.fold_in(k0, 3), (b, nc, l, n))
+        t1 = bench(lambda: ops.ssd_chunk(xd, acum, bm, cm))
+        t2 = bench(lambda: ref.ssd_chunk(xd, acum, bm, cm))
+        print(f"ssd_chunk,B{b}NC{nc}L{l}H{h}P{p}N{n},{t1:.1f},{t2:.1f}")
+
+
+if __name__ == "__main__":
+    main()

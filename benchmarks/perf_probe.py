@@ -1,0 +1,57 @@
+"""Fast single-case perf probe for the §Perf hillclimb.
+
+Runs one (arch, shape, mesh) dry-run case with configurable knobs and
+prints the roofline terms — the measure step of the hypothesis loop.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch llama3-405b \
+      --shape train_4k [--multi-pod] [--moment-dtype bfloat16] \
+      [--microbatch 4] [--tag experiment-name]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--master-dtype", default="float32")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import run_case
+    rec = run_case(args.arch, args.shape, multi_pod=args.multi_pod,
+                   moment_dtype=args.moment_dtype,
+                   master_dtype=args.master_dtype, impl=args.impl,
+                   remat=not args.no_remat, save=not args.no_save,
+                   microbatch=args.microbatch, verbose=False)
+    if rec is None:
+        return
+    t_c = rec["flops"] / PEAK_FLOPS
+    t_m = rec["bytes_accessed"] / HBM_BW
+    t_x = rec["collective_bytes"] / ICI_BW
+    peak = rec["memory"]["peak_bytes"] / 2**30
+    print(f"[{args.tag}] {args.arch} x {args.shape} "
+          f"mesh={'pod512' if args.multi_pod else 'pod256'}")
+    print(f"  t_compute={t_c:.3e}s t_memory={t_m:.3e}s "
+          f"t_collective={t_x:.3e}s peak={peak:.2f}GiB")
+    print(f"  flops={rec['flops']:.4g} bytes={rec['bytes_accessed']:.4g} "
+          f"coll={rec['collective_bytes']:.4g}")
+    print("  coll breakdown:", json.dumps(
+        {k: f"{v:.3g}" for k, v in rec["collective_bytes_raw"].items()}))
+    print("  counts:", rec["collective_counts"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+compiled dry-run artifacts (no wall clock on CPU — structural analysis).
+
+  compute     = FLOPs_per_chip / peak_FLOP/s          (197 TFLOP/s bf16)
+  memory      = bytes_per_chip / HBM_bw               (819 GB/s)
+  collective  = collective_bytes_per_chip / link_bw   (~50 GB/s ICI)
+
+The dry-run records per-chip (SPMD-partitioned) numbers, so terms divide by
+one chip's peak. MODEL_FLOPS = 6·N_active·tokens for training (2·N_active
+forward-only for inference shapes); ratio = MODEL_FLOPS / HLO_FLOPs flags
+remat/redundancy waste.
+
+Caveats (documented, consistent across perf iterations so deltas are real):
+ - "bytes accessed" is XLA's per-op pre-fusion count — an HBM-traffic UPPER
+   bound (TPU fusion would cut it several-fold). The memory term is
+   therefore pessimistic; compute is the firm lower bound.
+ - collective bytes use ring-model result-size accounting (see dryrun.py).
+"""
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   os.environ.get("DRYRUN_ROOT", "dryrun"))
+
+SHAPE_TOKENS = {
+    # (kind, tokens processed per step, global)
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,         # one token per sequence
+    "long_500k": 1,
+}
+
+
+def load(mesh: str = "pod256") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def analyze(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    t_comp = rec["flops"] / PEAK_FLOPS
+    t_mem = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collective_bytes"] / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    # 2·N_active per token forward; training = 3x (fwd+bwd) => the standard
+    # 6·N·D. Inference shapes are forward-only.
+    model_flops = 2.0 * rec["active_params"] * tokens
+    if rec["kind"] == "train":
+        model_flops *= 3.0
+    model_flops_per_chip = model_flops / chips
+    ratio = model_flops_per_chip / max(rec["flops"], 1.0)
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_ratio": ratio,
+        "roofline_fraction": t_comp / max(bound, 1e-30),
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+    }
+
+
+def main():
+    for mesh in ("pod256", "pod512"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"\n# roofline [{mesh}] — terms in seconds/step (per chip)")
+        print("arch,shape,t_compute,t_memory,t_collective,dominant,"
+              "useful_ratio,roofline_frac,peak_GiB")
+        for rec in rows:
+            a = analyze(rec)
+            print(f"{a['arch']},{a['shape']},{a['t_compute_s']:.3e},"
+                  f"{a['t_memory_s']:.3e},{a['t_collective_s']:.3e},"
+                  f"{a['dominant']},{a['useful_ratio']:.2f},"
+                  f"{a['roofline_fraction']:.2f},{a['peak_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Run every benchmark (one per paper table/figure + roofline + kernels).
+
+  PYTHONPATH=src python -m benchmarks.run            # full sweep
+  PYTHONPATH=src python -m benchmarks.run --fast     # reduced T/seeds
+  PYTHONPATH=src python -m benchmarks.run --only fig4_ratio
+"""
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "fig4_ratio",
+    "fig6_7_reward_violation",
+    "fig8_budget_sweep",
+    "fig9_driven",
+    "fig10_maxN",
+    "fig11_table4_direct",
+    "fig12_two_tier",
+    "fig13_offline",
+    "fig14_async",
+    "appendix_partition",
+    "kernel_bench",
+    "roofline",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    mods = [args.only] if args.only else MODULES
+    failures = []
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            if args.fast and name.startswith("fig"):
+                mod.main(T=400, seeds=2)
+            else:
+                mod.main()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"-- {name} done in {time.time() - t0:.1f}s")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nALL BENCHMARKS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

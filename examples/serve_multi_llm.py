@@ -1,0 +1,16 @@
+"""End-to-end driver: the C2MAB-V router serving REAL JAX models.
+
+Builds a pool of three reduced-architecture pool members (one trained on the
+query stream, two untrained), deploys them behind the scheduling cloud, and
+runs the full local-cloud protocol: relax -> round -> dispatch -> generate ->
+measure quality -> Eq.(6) update. The router learns to cascade to the
+trained (cheap, good) model and stops querying the expensive ones.
+
+  PYTHONPATH=src python examples/serve_multi_llm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--kind", "awc", "--rounds", "25", "--n", "2", "--rho", "0.6",
+          "--pool", "h2o-danube-3-4b,mamba2-780m,starcoder2-7b",
+          "--train-first", "1"])

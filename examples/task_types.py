@@ -1,0 +1,34 @@
+"""The three collaborative task types (paper §3) side by side.
+
+AWC — user-experience cascade: any satisfying answer counts.
+SUC — parallel subject tutoring: every selected LLM's answer counts.
+AIC — project sub-modules: ALL selected LLMs must succeed.
+
+Shows how the same bandit machinery adapts its selections to each reward
+structure under the same pool and budget discipline.
+
+  PYTHONPATH=src python examples/task_types.py
+"""
+import numpy as np
+
+from repro.core import bandit, metrics, rewards
+from repro.core.policies import PolicyConfig
+from repro.env import default_rho, paper_pool
+
+T = 1500
+pool = paper_pool("sciq")
+
+for kind, story in [("awc", "user-experience cascade (any win)"),
+                    ("suc", "parallel tutoring (sum up)"),
+                    ("aic", "project modules (all in)")]:
+    rho = default_rho(pool, kind, n=4)
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=4, rho=rho, delta=1 / T,
+                        alpha_mu=0.3, alpha_c=0.01)
+    res = bandit.simulate("c2mabv", pool, pcfg, T=T, seeds=4)
+    v = metrics.violation_curve(res.cost, rho)
+    picks = res.action[:, -200:].mean((0, 1))   # late-round selections
+    chosen = [n for n, p in zip(pool.names, picks) if p > 0.4]
+    print(f"\n{kind.upper()} — {story}")
+    print(f"  reward/round {res.reward.mean():.3f}  "
+          f"violation V(T) {v[:, -1].mean():.4f}  (rho {rho:.2f})")
+    print(f"  converged selection: {chosen}")

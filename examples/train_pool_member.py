@@ -1,0 +1,18 @@
+"""Train a pool member end-to-end on the synthetic LM stream with
+checkpointing — the substrate path a real deployment would use to produce
+the models the C2MAB-V router schedules.
+
+  PYTHONPATH=src python examples/train_pool_member.py [--arch zamba2-2.7b]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-780m")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--ckpt-dir",
+                "/tmp/repro_ckpt", "--ckpt-every", "50"])

@@ -1,0 +1,81 @@
+"""msgpack + raw-numpy checkpointing (orbax is not available offline).
+
+Layout: <dir>/<step>/manifest.msgpack  (treedef, shapes, dtypes)
+        <dir>/<step>/arrays.bin        (concatenated C-order buffers)
+Atomic via tmp-dir rename; keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+
+
+def save(directory: str, step: int, tree, keep: int = 3) -> str:
+    leaves, _ = _flatten(tree)
+    names = _paths(tree)
+    tmp = os.path.join(directory, f".tmp-{step}")
+    final = os.path.join(directory, str(step))
+    os.makedirs(tmp, exist_ok=True)
+    manifest = []
+    with open(os.path.join(tmp, "arrays.bin"), "wb") as f:
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(leaf)
+            manifest.append({"name": name, "shape": list(arr.shape),
+                             "dtype": str(arr.dtype), "nbytes": arr.nbytes})
+            f.write(np.ascontiguousarray(arr).tobytes())
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"step": step, "arrays": manifest}))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def restore(directory: str, like, step: Optional[int] = None):
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, str(step))
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves, treedef = _flatten(like)
+    out = []
+    with open(os.path.join(path, "arrays.bin"), "rb") as f:
+        for meta, leaf in zip(manifest["arrays"], leaves):
+            buf = f.read(meta["nbytes"])
+            arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])
+                                ).reshape(meta["shape"]).copy()
+            assert tuple(arr.shape) == tuple(np.shape(leaf)), (
+                meta["name"], arr.shape, np.shape(leaf))
+            out.append(arr)
+    return jax.tree.unflatten(treedef, out), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d) for d in os.listdir(directory) if d.isdigit()]
+    return max(steps) if steps else None
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(int(d) for d in os.listdir(directory) if d.isdigit())
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, str(s)), ignore_errors=True)

@@ -1,0 +1,8 @@
+"""C2MAB-V — the paper's contribution: cost-effective combinatorial bandit
+LLM selection with versatile reward models (AWC / SUC / AIC)."""
+from repro.core.bandit import SimResult, optimal_value, simulate
+from repro.core.policies import PolicyConfig, make_policy
+from repro.core.rewards import ALPHA, KINDS, relaxed_reward, set_reward
+
+__all__ = ["SimResult", "optimal_value", "simulate", "PolicyConfig",
+           "make_policy", "ALPHA", "KINDS", "relaxed_reward", "set_reward"]

@@ -1,0 +1,55 @@
+"""Confidence-bound machinery (paper §4.1, Lemma 1, Eq. 6).
+
+Running statistics live in a flat dict of (K,) arrays so the whole policy
+state scans/vmaps. Unselected arms have T=0 -> infinite radius -> UCB caps
+at 1 and LCB at 0, which forces initial exploration exactly as in CUCB-style
+initialization.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_stats(k: int) -> Dict[str, jnp.ndarray]:
+    z = jnp.zeros((k,), jnp.float32)
+    return {"mu_hat": z, "c_hat": z, "t_mu": z, "t_c": z}
+
+
+def radius(t, t_k, k: int, delta: float):
+    """ρ_{t,·} = sqrt( ln(2π²K t³ / 3δ) / (2 T) );  +inf when T == 0."""
+    t = jnp.maximum(t.astype(jnp.float32), 1.0)
+    num = jnp.log(2 * math.pi ** 2 * k * t ** 3 / (3 * delta))
+    return jnp.where(t_k > 0, jnp.sqrt(num / (2 * jnp.maximum(t_k, 1.0))),
+                     jnp.inf)
+
+
+def reward_ucb(stats, t, delta: float, alpha_mu: float):
+    k = stats["mu_hat"].shape[0]
+    r = radius(t, stats["t_mu"], k, delta)
+    return jnp.minimum(stats["mu_hat"] + alpha_mu * r, 1.0)
+
+
+def cost_lcb(stats, t, delta: float, alpha_c: float):
+    k = stats["c_hat"].shape[0]
+    r = radius(t, stats["t_c"], k, delta)
+    return jnp.maximum(stats["c_hat"] - alpha_c * r, 0.0)
+
+
+def update_stats(stats, feedback_mask, rewards, costs):
+    """Eq. (6) running means over the observed subset F_t."""
+    f = feedback_mask.astype(jnp.float32)
+    t_mu = stats["t_mu"] + f
+    t_c = stats["t_c"] + f
+    mu_hat = jnp.where(
+        t_mu > 0,
+        (stats["mu_hat"] * stats["t_mu"] + rewards * f) / jnp.maximum(t_mu, 1),
+        0.0)
+    c_hat = jnp.where(
+        t_c > 0,
+        (stats["c_hat"] * stats["t_c"] + costs * f) / jnp.maximum(t_c, 1),
+        0.0)
+    return {"mu_hat": mu_hat, "c_hat": c_hat, "t_mu": t_mu, "t_c": t_c}

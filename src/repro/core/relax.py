@@ -1,0 +1,141 @@
+"""Relaxed constrained solvers (paper §4.1, Eq. 3/4/5) — pure JAX.
+
+The shared polytope is  P = { z̃∈[0,1]^K : Σz̃ (=|≤) N,  Σ c̲_k z̃_k ≤ ρ }.
+
+`lp_topn` solves  max ⟨w, z̃⟩ over P with a *parametric Lagrangian* method:
+for multiplier λ the optimizer of the Lagrangian is the top-N arms by score
+w−λc; cost(λ) is non-increasing, so bisection finds the breakpoint λ*, and
+mixing the two adjacent vertices hits the budget exactly. For this
+2-constraint box LP the optimum has ≤2 fractional coordinates, so the mixed
+point is the true LP optimum (validated against brute-force vertex
+enumeration in tests). This replaces the paper's Gurobi call with a jit-able
+O(K log K · iters) routine that vmaps across simulation seeds.
+
+  SUC: lp_topn(μ̄)                    (Eq. 4, α = 1)
+  AIC: lp_topn(ln μ̄)                 (Eq. 5 log-transform, α = 1)
+  AWC: continuous greedy — Frank-Wolfe on the multilinear extension with
+       lp_topn as the linear-maximization oracle (Eq. 3, α = 1 − 1/e).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rewards as R
+
+BISECT_ITERS = 48
+DOUBLE_ITERS = 24
+FW_STEPS = 16
+
+
+def _topn_given_lambda(w, c, n: int, lam, equality: bool):
+    """Vertex z(λ): indicator of the top-n arms by score w - λ·c."""
+    score = w - lam * c
+    k = w.shape[-1]
+    _, idx = jax.lax.top_k(score, n)
+    z = jnp.zeros((k,), jnp.float32).at[idx].set(1.0)
+    if not equality:
+        z = z * (score > 0)  # inclusive matroid: drop negative-score arms
+    return z
+
+
+def lp_topn(w, c, n: int, rho: float, equality: bool):
+    """max ⟨w,z⟩ s.t. Σz (=|≤) n, ⟨c,z⟩ ≤ rho, z∈[0,1]^K."""
+    w = w.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    z0 = _topn_given_lambda(w, c, n, 0.0, equality)
+    cost0 = jnp.dot(c, z0)
+
+    def cost_at(lam):
+        return jnp.dot(c, _topn_given_lambda(w, c, n, lam, equality))
+
+    # double λ until feasible
+    def dbl(_, lam):
+        return jnp.where(cost_at(lam) > rho, lam * 2.0, lam)
+    lam_hi0 = jax.lax.fori_loop(0, DOUBLE_ITERS, dbl, jnp.float32(1.0))
+
+    # Bisection carrying the *vertices* on each side of the breakpoint —
+    # recomputing them from λ at the end loses the feasible vertex once
+    # float32 makes lam_lo == lam_hi (ties then resolve arbitrarily).
+    z_hi0 = _topn_given_lambda(w, c, n, lam_hi0, equality)
+
+    def bis(_, carry):
+        lo, hi, z_l, z_h = carry
+        mid = 0.5 * (lo + hi)
+        z_m = _topn_given_lambda(w, c, n, mid, equality)
+        feas = jnp.dot(c, z_m) <= rho
+        lo_n = jnp.where(feas, lo, mid)
+        hi_n = jnp.where(feas, mid, hi)
+        z_l = jnp.where(feas, z_l, z_m)
+        z_h = jnp.where(feas, z_m, z_h)
+        return lo_n, hi_n, z_l, z_h
+
+    _, _, z_lo, z_hi = jax.lax.fori_loop(
+        0, BISECT_ITERS, bis, (jnp.float32(0.0), lam_hi0, z0, z_hi0))
+    c_lo = jnp.dot(c, z_lo)
+    c_hi = jnp.dot(c, z_hi)
+    theta = jnp.where(c_lo > c_hi, (rho - c_hi) / jnp.maximum(c_lo - c_hi,
+                                                              1e-12), 0.0)
+    theta = jnp.clip(theta, 0.0, 1.0)
+    z_mix = theta * z_lo + (1 - theta) * z_hi
+    return jnp.where(cost0 <= rho, z0, z_mix)
+
+
+def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float):
+    """Fractional z̃ solving the relaxed problem for the given reward model."""
+    if kind == "suc":
+        return lp_topn(mu_bar, c_low, n, rho, equality=True)
+    if kind == "aic":
+        w = jnp.log(jnp.clip(mu_bar, R.EPS, 1.0))
+        return lp_topn(w, c_low, n, rho, equality=True)
+    if kind == "awc":
+        def fw(i, z):
+            g = R.awc_multilinear_grad(z, mu_bar)
+            v = lp_topn(g, c_low, n, rho, equality=False)
+            return z + v / FW_STEPS
+        return jax.lax.fori_loop(0, FW_STEPS, fw,
+                                 jnp.zeros_like(mu_bar, jnp.float32))
+    raise ValueError(kind)
+
+
+# ===================================================================== direct
+def enumerate_actions(k: int, n: int, equality: bool) -> np.ndarray:
+    """All feasible index sets as a boolean matrix (M, K)."""
+    sizes = [n] if equality else range(1, n + 1)
+    rows = []
+    for sz in sizes:
+        for comb in itertools.combinations(range(k), sz):
+            row = np.zeros(k, bool)
+            row[list(comb)] = True
+            rows.append(row)
+    return np.asarray(rows)
+
+
+def solve_direct(kind: str, mu, c, n: int, rho: float,
+                 actions: Optional[np.ndarray] = None
+                 ) -> Tuple[np.ndarray, float]:
+    """C2MAB-V-Direct (paper Eq. 48 / App. E.3): exact enumeration of the
+    discrete constrained problem. Exponential in K — the Table-4 baseline."""
+    mu = np.asarray(mu, np.float64)
+    c = np.asarray(c, np.float64)
+    k = mu.shape[0]
+    if actions is None:
+        actions = enumerate_actions(k, n, R.equality_constrained(kind))
+    cost = actions @ c
+    feas = cost <= rho + 1e-12
+    if kind == "awc":
+        vals = 1.0 - np.prod(1.0 - mu[None, :] * actions, axis=1)
+    elif kind == "suc":
+        vals = actions @ mu
+    else:
+        vals = np.exp(actions @ np.log(np.maximum(mu, 1e-12)))
+    vals = np.where(feas, vals, -np.inf)
+    best = int(np.argmax(vals))
+    if not np.isfinite(vals[best]):   # infeasible instance: cheapest action
+        best = int(np.argmin(cost))
+    return actions[best], float(vals[best])

@@ -1,0 +1,63 @@
+"""Versatile reward models (paper §3): AWC, SUC, AIC.
+
+Set rewards r(S;μ) over a boolean selection mask, and their relaxed
+counterparts r̃(z̃;μ) over fractional z̃∈[0,1]^K (paper Eq. 3/4/5):
+
+  AWC  r = 1 - ∏_{k∈S}(1-μ_k)      r̃ = 1 - ∏_k (1 - μ_k z̃_k)
+  SUC  r = Σ_{k∈S} μ_k             r̃ = Σ_k μ_k z̃_k
+  AIC  r = ∏_{k∈S} μ_k             r̃ = ∏_k μ_k^{z̃_k}
+
+All three are monotone, 1-Lipschitz in μ (L=1 for AWC/AIC since each factor
+is in [0,1]; SUC over an action of size N is N-Lipschitz in the sup norm but
+1-Lipschitz per-arm, which is what the analysis uses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("awc", "suc", "aic")
+# offline approximation-oracle ratio per reward model (paper App. C.2)
+ALPHA = {"awc": 1.0 - 1.0 / jnp.e, "suc": 1.0, "aic": 1.0}
+EPS = 1e-9
+
+
+def set_reward(kind: str, mask, mu):
+    """r(S;μ). mask (..., K) in {0,1} (float or bool), mu (K,)."""
+    mask = mask.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    if kind == "awc":
+        return 1.0 - jnp.prod(1.0 - mu * mask, axis=-1)
+    if kind == "suc":
+        return jnp.sum(mu * mask, axis=-1)
+    if kind == "aic":
+        # empty-product over unselected arms = 1
+        return jnp.prod(jnp.where(mask > 0, mu, 1.0), axis=-1)
+    raise ValueError(kind)
+
+
+def relaxed_reward(kind: str, z, mu):
+    """r̃(z̃;μ) closed forms."""
+    z = z.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    if kind == "awc":
+        return 1.0 - jnp.prod(1.0 - mu * z, axis=-1)
+    if kind == "suc":
+        return jnp.sum(mu * z, axis=-1)
+    if kind == "aic":
+        return jnp.exp(jnp.sum(z * jnp.log(jnp.maximum(mu, EPS)), axis=-1))
+    raise ValueError(kind)
+
+
+def equality_constrained(kind: str) -> bool:
+    """SUC/AIC select exactly N (base matroid); AWC at most N (paper App. C.1)."""
+    return kind in ("suc", "aic")
+
+
+def awc_multilinear_grad(z, mu):
+    """∂r̃/∂z̃_k = μ_k ∏_{j≠k}(1-μ_j z̃_j), computed in log space."""
+    z = z.astype(jnp.float32)
+    mu = jnp.clip(mu.astype(jnp.float32), 0.0, 1.0 - 1e-6)
+    logs = jnp.log1p(-mu * z)
+    total = jnp.sum(logs, axis=-1, keepdims=True)
+    return mu * jnp.exp(total - logs)

@@ -1,0 +1,145 @@
+"""Discretization rounding (paper §4.2, Appendix B) — the scheduling cloud.
+
+Algorithm 3 (SUC/AIC; pairwise "pipage" rounding) in two flavours:
+  - `pairwise_round`  : jit-able lax.while_loop (used inside scanned sims)
+  - `pairwise_round_np`: numpy reference
+Both preserve marginals exactly: E[1_S] = z̃ — the property the regret proof
+(E[r̃(1_S)] ≥ r̃(z̃), per-direction convexity) and the violation martingale
+rest on.
+
+Algorithm 2 (AWC; matroid swap rounding over cardinality-matroid bases,
+Chekuri-Vondrák-Zenklusen) is host-side numpy: decompose z̃ into a convex
+combination of bases (Carathéodory on the base polytope, dummy-padded when
+Σz̃ < N), then successively merge bases with probabilistic swaps.
+`pairwise_round` is also valid for AWC (the multilinear extension is convex
+along e_i − e_j, App. C.2 ❶) and is what the fast scanned path uses.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-5
+
+
+# ------------------------------------------------------------------ Alg. 3
+def pairwise_round(z, key):
+    """jit-able Algorithm 3. Returns a {0,1} float mask (K,)."""
+    z = jnp.clip(z.astype(jnp.float32), 0.0, 1.0)
+
+    def frac_mask(z):
+        return (z > EPS) & (z < 1.0 - EPS)
+
+    def cond(carry):
+        z, _ = carry
+        return frac_mask(z).sum() >= 2
+
+    def body(carry):
+        z, key = carry
+        f = frac_mask(z)
+        idx = jnp.argsort(~f)          # fractional entries first (stable)
+        i, j = idx[0], idx[1]
+        zi, zj = z[i], z[j]
+        p = jnp.minimum(1.0 - zi, zj)
+        q = jnp.minimum(zi, 1.0 - zj)
+        key, k1 = jax.random.split(key)
+        u = jax.random.uniform(k1)
+        first = u < q / jnp.maximum(p + q, 1e-12)
+        zi_new = jnp.where(first, zi + p, zi - q)
+        zj_new = jnp.where(first, zj - p, zj + q)
+        z = z.at[i].set(zi_new).at[j].set(zj_new)
+        return z, key
+
+    z, key = jax.lax.while_loop(cond, body, (z, key))
+    # at most one fractional coordinate remains: Bernoulli(z) keeps marginals
+    f = frac_mask(z)
+    key, k1 = jax.random.split(key)
+    u = jax.random.uniform(k1)
+    z = jnp.where(f, (u < z).astype(jnp.float32), jnp.round(z))
+    return z
+
+
+def pairwise_round_np(z, rng: np.random.Generator) -> np.ndarray:
+    z = np.clip(np.asarray(z, np.float64), 0.0, 1.0)
+    while True:
+        frac = np.flatnonzero((z > EPS) & (z < 1 - EPS))
+        if frac.size < 2:
+            break
+        i, j = frac[0], frac[1]
+        p = min(1 - z[i], z[j])
+        q = min(z[i], 1 - z[j])
+        if rng.random() < q / (p + q):
+            z[i] += p
+            z[j] -= p
+        else:
+            z[i] -= q
+            z[j] += q
+    frac = np.flatnonzero((z > EPS) & (z < 1 - EPS))
+    for i in frac:
+        z[i] = 1.0 if rng.random() < z[i] else 0.0
+    return np.round(z)
+
+
+# ------------------------------------------------------------------ Alg. 2
+def decompose_bases(z: np.ndarray, n: int,
+                    tol: float = 1e-9) -> Tuple[list, list]:
+    """z (K,), Σz == n: convex decomposition into bases of the cardinality
+    matroid (index sets of size n). Returns (weights, bases)."""
+    rem = np.asarray(z, np.float64).copy()
+    total = 1.0
+    weights, bases = [], []
+    for _ in range(4 * len(rem) + 8):
+        if total <= tol:
+            break
+        order = np.argsort(-rem, kind="stable")
+        base = order[:n]
+        g1 = rem[base].min()
+        not_base = order[n:]
+        g2 = total - (rem[not_base].max() if not_base.size else 0.0)
+        gamma = max(min(g1, g2, total), tol / 10)
+        weights.append(gamma)
+        bases.append(np.sort(base))
+        rem[base] -= gamma
+        total -= gamma
+    s = sum(weights)
+    return [w / s for w in weights], bases
+
+
+def swap_round_np(z: np.ndarray, n: int, rng: np.random.Generator,
+                  pad_to_base: bool = True) -> np.ndarray:
+    """Algorithm 2: swap rounding for the cardinality matroid.
+
+    Handles Σz < n (AWC inclusive matroid) by padding with n dummy arms.
+    Returns {0,1} mask over the original K arms.
+    """
+    z = np.clip(np.asarray(z, np.float64), 0.0, 1.0)
+    k = z.shape[0]
+    deficit = max(n - z.sum(), 0.0)
+    if pad_to_base and deficit > 1e-12:
+        pad = np.full(n, deficit / n)
+        z_full = np.concatenate([z, pad])
+    else:
+        z_full = z
+    weights, bases = decompose_bases(z_full, n)
+    cur = set(bases[0].tolist())
+    p1 = weights[0]
+    for p2, b in zip(weights[1:], bases[1:]):
+        b2 = set(b.tolist())
+        while cur != b2:
+            i = next(iter(cur - b2))
+            j = next(iter(b2 - cur))
+            if rng.random() < p1 / (p1 + p2):
+                b2.discard(j)
+                b2.add(i)
+            else:
+                cur.discard(i)
+                cur.add(j)
+        p1 += p2
+    mask = np.zeros(k)
+    for i in cur:
+        if i < k:
+            mask[i] = 1.0
+    return mask

@@ -1,0 +1,39 @@
+"""Statistically-based cost model (paper §3).
+
+y_{t,k} = (l_in(q_t) + l_out(q_t)) * C_k with l_out random. We sample
+normalized costs directly: cost_k = mean_cost_k * (l_in + L_out)/(l_in + E L_out)
+with L_out ~ Gamma(shape, mean=E L_out) — positive, right-skewed, matching
+observed output-length distributions. All jax so it scans/vmaps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+OUT_SHAPE = 4.0        # Gamma shape for output-length variability
+IN_FRAC = 0.35         # l_in / (l_in + E[l_out]) — deterministic part
+
+
+def sample_costs(key, mean_cost):
+    """One round of per-arm normalized costs, (K,) in [0, ~2.5*mean]."""
+    g = jax.random.gamma(key, OUT_SHAPE, mean_cost.shape) / OUT_SHAPE
+    mult = IN_FRAC + (1.0 - IN_FRAC) * g
+    return jnp.clip(mean_cost * mult, 0.0, 1.0)
+
+
+def sample_rewards(key, mu, levels=(0.0, 0.2, 0.6, 1.0)):
+    """App.-E.1 discrete reward levels with per-arm mean == mu.
+
+    Level probabilities: mixture of 'fail'(0), 'empty'(0.2), 'format'(0.6),
+    'correct'(1.0) chosen so E[X] = mu; higher-mu arms shift mass upward.
+    """
+    mu = jnp.clip(mu, 0.02, 0.98)
+    lv = jnp.asarray(levels, jnp.float32)
+    # two-point construction between adjacent levels bracketing mu keeps the
+    # mean exact while staying on the discrete support:
+    idx = jnp.clip(jnp.searchsorted(lv, mu, side="right") - 1, 0, len(levels) - 2)
+    lo = lv[idx]
+    hi = lv[idx + 1]
+    p_hi = (mu - lo) / jnp.maximum(hi - lo, 1e-9)
+    u = jax.random.uniform(key, mu.shape)
+    return jnp.where(u < p_hi, hi, lo)

@@ -1,0 +1,36 @@
+"""Partial LLM feedback F_t ⊆ S_t (paper §3).
+
+AWC (user-experience cascade, Fig. 2): the selected arms are queried in
+ascending-cost order; querying stops at the first *success* (X == 1.0, the
+"correct" level). F_t is the queried prefix. Cost is likewise only incurred
+for queried arms — but the *budget accounting in the algorithm* stays
+worst-case (all of S_t), per the paper's "cautious" strategy.
+
+SUC / AIC: every selected arm executes its sub-task → F_t = S_t (o* = 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SUCCESS_LEVEL = 1.0
+
+
+def observe(kind: str, action_mask, rewards, mean_cost):
+    """Returns feedback mask F_t (K,) float in {0,1}.
+
+    action_mask (K,) — the selected set; rewards (K,) — this round's draws.
+    """
+    if kind in ("suc", "aic"):
+        return action_mask
+    # AWC cascade: order selected arms by cost ascending; observe a prefix
+    # ending at the first success (or the whole set if none succeed).
+    order = jnp.argsort(jnp.where(action_mask > 0, mean_cost, jnp.inf))
+    sel_sorted = action_mask[order]
+    succ_sorted = (rewards[order] >= SUCCESS_LEVEL) & (sel_sorted > 0)
+    # positions strictly after the first success are unobserved
+    seen_succ = jnp.cumsum(succ_sorted.astype(jnp.int32))
+    before_or_at = (seen_succ - succ_sorted.astype(jnp.int32)) == 0
+    obs_sorted = sel_sorted * before_or_at.astype(jnp.float32)
+    inv = jnp.argsort(order)
+    return obs_sorted[inv]

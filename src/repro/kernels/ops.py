@@ -1,0 +1,37 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``REPRO_PALLAS_INTERPRET=0`` (or pass interpret=False) for compiled kernels.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, bq: int = _fa.DEFAULT_BQ,
+                    bk: int = _fa.DEFAULT_BK):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=_interpret())
+
+
+def decode_attention(q, k, v, pos, *, bk: int = _dec.DEFAULT_BK):
+    return _dec.decode_attention(q, k, v, pos, bk=bk, interpret=_interpret())
+
+
+def ssd_chunk(xd, acum, bm, cm):
+    return _ssd.ssd_chunk(xd, acum, bm, cm, interpret=_interpret())

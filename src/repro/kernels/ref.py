@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, t, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, n_rep, hd)
+                            ).reshape(b, t, kv * n_rep, hd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd). fp32 softmax."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    sc = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (s, t), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (s, t), 1)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask, sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention(q, k, v, pos):
+    """q (B,1,H,hd); cache k/v (B,T,KV,hd); pos scalar — mask slots > pos."""
+    b, _, h, hd = q.shape
+    t = k.shape[1]
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    sc = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(t) <= pos
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bthk->bshk", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk(xd, acum, bm, cm):
+    """Intra-chunk SSD + chunk-state oracle.
+
+    xd   (B,NC,L,H,P) decayed inputs (x*dt)
+    acum (B,NC,L,H)   inclusive cumulative log decay
+    bm,cm (B,NC,L,N)
+    Returns y_intra (B,NC,L,H,P), states (B,NC,H,P,N).
+    """
+    l = xd.shape[2]
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cm.astype(jnp.float32),
+                    bm.astype(jnp.float32))
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, lmat,
+                   xd.astype(jnp.float32))
+    atot = acum[:, :, -1:, :]
+    dec_out = jnp.exp(atot - acum)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bm.astype(jnp.float32),
+                        dec_out, xd.astype(jnp.float32))
+    return y, states

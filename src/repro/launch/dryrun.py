@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, SPMD-partitions, and compiles on the production meshes
+(16x16 = 256 chips single-pod; 2x16x16 = 512 chips multi-pod) — with no
+device allocation (ShapeDtypeStruct inputs only).
+
+For each combination it records:
+  - memory_analysis(): per-device argument/output/temp bytes (fits-in-HBM)
+  - cost_analysis():  HLO FLOPs + bytes accessed (roofline numerator)
+  - collective bytes: parsed from the partitioned HLO text, summed per
+    collective kind (roofline collective term)
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>--<shape>.json; the
+roofline benchmark reads them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, get_config, list_archs
+from repro.configs.shapes import SHAPES
+from repro.launch import mesh as mesh_mod
+from repro.models import model as M
+from repro.sharding import tree_shardings, use_mesh
+from repro.train import optimizer as opt
+from repro.train.train_step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in partitioned HLO.
+
+    Methodology: per-device result bytes are the ring-transfer lower bound
+    for all-gather / all-to-all / collective-permute; all-reduce moves ~2x
+    its operand in a ring, which we account with a 2x factor; reduce-scatter
+    result is 1/shards of the operand — we use the *operand* (input) shape
+    there. This is a structural proxy (no wall clock on CPU), consistent
+    across iterations so deltas are meaningful.
+    """
+    out = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in COLLECTIVES:
+            # match `<shape> all-reduce(`, incl. tuple shapes and -start ops
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                if re.search(rf"\b{kind}-done\(", rhs):
+                    continue
+                shapes = _SHAPE_RE.findall(rhs.split(kind)[0])
+                nbytes = 0.0
+                for dt, dims in shapes:
+                    if dt not in DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * DTYPE_BYTES[dt]
+                if kind == "all-reduce":
+                    nbytes *= 2.0
+                elif kind == "reduce-scatter":
+                    # operand = result * shards; parse operand shapes instead
+                    ops = _SHAPE_RE.findall(rhs.split("(", 1)[1])
+                    if ops:
+                        nbytes = sum(
+                            int(np.prod([int(d) for d in dims.split(",") if d]
+                                        or [1])) * DTYPE_BYTES.get(dt, 0)
+                            for dt, dims in ops)
+                out[kind] += nbytes
+                counts[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+# ===================================================================== specs
+def _abstract_tree(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+                        if not isinstance(x, jax.ShapeDtypeStruct) else x,
+                        tree)
+
+
+def build_case(cfg: ArchConfig, shape: InputShape, mesh, *,
+               moment_dtype: str = "float32", master_dtype: str = "float32",
+               remat: bool = True, impl: str = "auto", microbatch: int = 1):
+    """Returns (fn, args, in_shardings) ready to lower."""
+    p_abs = M.abstract_params(cfg)
+    p_axes = M.param_axes(cfg)
+    p_shard = tree_shardings(p_abs, p_axes, mesh)
+
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig(moment_dtype=moment_dtype,
+                               master_dtype=master_dtype)
+        o_abs = opt.abstract_adamw(ocfg, p_abs)
+        o_axes = opt.adamw_state_axes(p_axes)
+        o_shard = tree_shardings(o_abs, o_axes, mesh)
+        inputs, in_axes = M.input_specs(cfg, shape, abstract=True)
+        b_shard = tree_shardings(_abstract_tree(inputs), in_axes, mesh)
+        fn = make_train_step(cfg, ocfg, remat=remat, impl=impl,
+                             microbatch=microbatch)
+        return fn, (p_abs, o_abs, inputs), (p_shard, o_shard, b_shard)
+
+    if shape.kind == "prefill":
+        inputs, in_axes = M.input_specs(cfg, shape, abstract=True)
+        b_shard = tree_shardings(_abstract_tree(inputs), in_axes, mesh)
+        fn = make_prefill_step(cfg, impl=impl)
+        return fn, (p_abs, inputs), (p_shard, b_shard)
+
+    # decode
+    b = shape.global_batch
+    cache, c_axes = M.init_decode_caches(cfg, b, shape.seq_len,
+                                         jnp.bfloat16, abstract=True)
+    c_shard = tree_shardings(cache, c_axes, mesh)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    t_shard = tree_shardings(tokens, ("batch", None), mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    rep = NamedSharding(mesh, P())
+    fn = make_serve_step(cfg)
+    return fn, (p_abs, tokens, cache, pos), (p_shard, t_shard, c_shard, rep)
+
+
+def runnable(cfg: ArchConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is this (arch, shape) pair applicable? (DESIGN.md §Arch-applicability)"""
+    if shape.name.startswith("long_") and not cfg.supports_long_context:
+        return False, "full-attention arch: 500k decode is not sub-quadratic"
+    return True, ""
+
+
+# ========================================================= layer extrapolation
+# XLA's cost_analysis counts a scanned layer body ONCE regardless of trip
+# count (verified: scan of 10 matmuls reports 1 matmul of FLOPs). We recover
+# whole-model numbers structurally: compile the same program with U=2 and
+# U=4 layer-units, then   total(U) = c(2) + (U-2)/2 * (c(4) - c(2)).
+# A "unit" is one scan step: a layer (dense/moe/ssm/vlm), a shared-attention
+# group (hybrid), or an enc+dec layer pair (audio).
+def layer_units(cfg: ArchConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_period
+    return cfg.n_layers
+
+
+def with_units(cfg: ArchConfig, u: int) -> ArchConfig:
+    import dataclasses
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg, n_layers=u * cfg.shared_attn_period)
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=u, n_enc_layers=u)
+    return dataclasses.replace(cfg, n_layers=u)
+
+
+def _case_cost(cfg, shape, mesh, **kw) -> Dict[str, float]:
+    with use_mesh(mesh), M.unroll_scans():
+        fn, args, shardings = build_case(cfg, shape, mesh, **kw)
+        compiled = jax.jit(fn, in_shardings=shardings).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"])}
+
+
+def extrapolated_cost(cfg: ArchConfig, shape: InputShape, mesh,
+                      **kw) -> Dict[str, float]:
+    u = layer_units(cfg)
+    lo, hi = (2, 4) if u >= 4 else (1, 2)
+    c_lo = _case_cost(with_units(cfg, lo), shape, mesh, **kw)
+    c_hi = _case_cost(with_units(cfg, hi), shape, mesh, **kw)
+    scale = (u - lo) / (hi - lo)
+    return {k: c_lo[k] + scale * (c_hi[k] - c_lo[k]) for k in c_lo}
+
+
+# ===================================================================== driver
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             moment_dtype: str = "float32", master_dtype: str = "float32",
+             save: bool = True, verbose: bool = True, impl: str = "auto",
+             remat: bool = True, microbatch: int = 1
+             ) -> Optional[Dict[str, Any]]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = runnable(cfg, shape)
+    if not ok:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name}: {why}")
+        return None
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    mesh_tag = "pod512" if multi_pod else "pod256"
+
+    t0 = time.time()
+    donate = {"train": (0, 1), "decode": (2,)}.get(shape.kind, ())
+    with use_mesh(mesh):
+        fn, args, shardings = build_case(cfg, shape, mesh,
+                                         moment_dtype=moment_dtype,
+                                         master_dtype=master_dtype,
+                                         impl=impl, remat=remat,
+                                         microbatch=microbatch)
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = parse_collective_bytes(compiled.as_text())
+    n = mesh_mod.n_chips(mesh)
+    extr = extrapolated_cost(cfg, shape, mesh, moment_dtype=moment_dtype,
+                             master_dtype=master_dtype,
+                             impl=impl, remat=remat, microbatch=microbatch)
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "chips": n,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # raw = scan body counted once; extrapolated = whole model
+        "flops_raw": float(cost.get("flops", -1.0)),
+        "flops": extr["flops"],
+        "bytes_accessed_raw": float(cost.get("bytes accessed", -1.0)),
+        "bytes_accessed": extr["bytes"],
+        "collective_bytes_raw": {k: v for k, v in coll.items()
+                                 if k != "counts"},
+        "collective_bytes": extr["coll"],
+        "collective_counts": coll["counts"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "moment_dtype": moment_dtype,
+        "microbatch": microbatch,
+    }
+    if verbose:
+        gb = record["memory"]["peak_bytes"] / 2**30
+        print(f"OK   {arch} x {shape_name} [{mesh_tag}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops {record['flops']:.3g} peak/dev {gb:.2f} GiB "
+              f"coll {record['collective_bytes']:.3g} B")
+    if save:
+        d = os.path.join(ARTIFACT_DIR, mesh_tag)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch}--{shape_name}.json"), "w") as f:
+            json.dump(record, f, indent=1)
+    jax.clear_caches()   # keep the 80-case sweep's RSS bounded
+    return record
+
+
+def all_pairs():
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--no-remat", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    if args.all:
+        for arch, shape_name in all_pairs():
+            for mp in meshes:
+                try:
+                    run_case(arch, shape_name, multi_pod=mp,
+                             moment_dtype=args.moment_dtype, impl=args.impl,
+                             remat=not args.no_remat)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape_name, mp, repr(e)[:200]))
+                    print(f"FAIL {arch} x {shape_name} mp={mp}: {e!r}"[:300])
+        if failures:
+            print(f"\n{len(failures)} FAILURES"); sys.exit(1)
+        print("\nALL DRY-RUNS PASSED")
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    for mp in meshes:
+        run_case(args.arch, args.shape, multi_pod=mp,
+                 moment_dtype=args.moment_dtype, impl=args.impl,
+                 remat=not args.no_remat)
+
+
+if __name__ == "__main__":
+    main()

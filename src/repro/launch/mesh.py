@@ -1,0 +1,29 @@
+"""Production meshes (TPU v5e numbers).
+
+A function, not a module constant, so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+# --- hardware constants (TPU v5e) -----------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2**30  # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh():
+    """Degenerate 1-device mesh for CPU smoke paths."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

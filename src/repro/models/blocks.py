@@ -1,0 +1,118 @@
+"""Per-layer blocks for the six architecture families."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, mlp_schema,
+                                 norm_schema)
+from repro.sharding import shard
+
+
+# ------------------------------------------------------------------ schemas
+def dense_block_schema(cfg):
+    return {"ln1": norm_schema(cfg), "attn": attn_mod.attention_schema(cfg),
+            "ln2": norm_schema(cfg), "mlp": mlp_schema(cfg)}
+
+
+def moe_block_schema(cfg):
+    s = {"ln1": norm_schema(cfg), "attn": attn_mod.attention_schema(cfg),
+         "ln2": norm_schema(cfg), "moe": moe_mod.moe_schema(cfg)}
+    if cfg.dense_residual:
+        s["mlp"] = mlp_schema(cfg)
+    return s
+
+
+def ssm_block_schema(cfg):
+    return {"ln1": norm_schema(cfg), "ssm": ssm_mod.ssm_schema(cfg)}
+
+
+def decoder_block_schema(cfg):
+    """Enc-dec decoder block: self-attn + cross-attn + mlp."""
+    return {"ln1": norm_schema(cfg), "self": attn_mod.attention_schema(cfg),
+            "ln2": norm_schema(cfg), "cross": attn_mod.attention_schema(cfg),
+            "ln3": norm_schema(cfg), "mlp": mlp_schema(cfg)}
+
+
+# ------------------------------------------------------------------ applies
+def apply_dense_block(cfg, p, x, positions, *, causal=True, impl="auto",
+                      window="cfg"):
+    h = attn_mod.apply_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                                 positions, causal=causal, impl=impl,
+                                 window=window)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return shard(x, "batch", "seq", "embed")
+
+
+def apply_moe_block(cfg, p, x, positions, *, impl="auto"):
+    h = attn_mod.apply_attention(cfg, p["attn"], apply_norm(cfg, p["ln1"], x),
+                                 positions, causal=True, impl=impl)
+    x = x + h
+    xn = apply_norm(cfg, p["ln2"], x)
+    y, aux = moe_mod.apply_moe_auto(cfg, p["moe"], xn)
+    if cfg.dense_residual:
+        y = y + apply_mlp(cfg, p["mlp"], xn)
+    return shard(x + y, "batch", "seq", "embed"), aux
+
+
+def apply_ssm_block(cfg, p, x):
+    y = ssm_mod.apply_ssm(cfg, p["ssm"], apply_norm(cfg, p["ln1"], x))
+    return shard(x + y, "batch", "seq", "embed")
+
+
+def apply_decoder_block(cfg, p, x, enc_out, positions, *, impl="auto"):
+    h = attn_mod.apply_attention(cfg, p["self"], apply_norm(cfg, p["ln1"], x),
+                                 positions, causal=True, impl=impl)
+    x = x + h
+    h = attn_mod.apply_attention(cfg, p["cross"], apply_norm(cfg, p["ln2"], x),
+                                 positions, causal=False, xkv=enc_out,
+                                 impl=impl, window=None)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln3"], x))
+    return shard(x, "batch", "seq", "embed")
+
+
+# ------------------------------------------------------------------ decode
+def apply_dense_block_decode(cfg, p, x, cache, pos, *, window="cfg"):
+    xn = apply_norm(cfg, p["ln1"], x)
+    h, cache = attn_mod.apply_attention_decode(cfg, p["attn"], xn, cache, pos,
+                                               window=window)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x, cache
+
+
+def apply_moe_block_decode(cfg, p, x, cache, pos):
+    xn = apply_norm(cfg, p["ln1"], x)
+    h, cache = attn_mod.apply_attention_decode(cfg, p["attn"], xn, cache, pos)
+    x = x + h
+    xn = apply_norm(cfg, p["ln2"], x)
+    y, _ = moe_mod.apply_moe_auto(cfg, p["moe"], xn)
+    if cfg.dense_residual:
+        y = y + apply_mlp(cfg, p["mlp"], xn)
+    return x + y, cache
+
+
+def apply_ssm_block_decode(cfg, p, x, cache):
+    y, cache = ssm_mod.apply_ssm_decode(cfg, p["ssm"],
+                                        apply_norm(cfg, p["ln1"], x), cache)
+    return x + y, cache
+
+
+def apply_decoder_block_decode(cfg, p, x, self_cache, cross_cache, pos):
+    xn = apply_norm(cfg, p["ln1"], x)
+    h, self_cache = attn_mod.apply_attention_decode(
+        cfg, p["self"], xn, self_cache, pos, window=None)
+    x = x + h
+    xn = apply_norm(cfg, p["ln2"], x)
+    h, _ = attn_mod.apply_attention_decode(
+        cfg, p["cross"], xn, cross_cache, pos, cross=True, window=None)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln3"], x))
+    return x, self_cache

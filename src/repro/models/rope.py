@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard RoPE + sectioned M-RoPE (Qwen2-VL).
+
+M-RoPE splits the rotary half-dim into 3 sections driven by (temporal,
+height, width) position ids. For pure-text streams all three ids coincide and
+M-RoPE degenerates to RoPE; the backbone keeps the sectioned compute path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> angles (..., S, head_dim//2) in fp32."""
+    inv = jnp.asarray(_freqs(head_dim, theta))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x (B,S,H,Dh); positions (B,S)."""
+    ang = rope_angles(positions, x.shape[-1], theta)          # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def mrope_sections(head_dim: int):
+    """3 sections over the half rotary dim (t/h/w), Qwen2-VL style."""
+    half = head_dim // 2
+    a = half // 4
+    return (half - 2 * a, a, a)  # temporal gets the largest share
+
+
+def apply_mrope(x, positions3, theta: float = 10_000.0):
+    """x (B,S,H,Dh); positions3 (3,B,S) = (temporal, height, width) ids."""
+    head_dim = x.shape[-1]
+    sections = mrope_sections(head_dim)
+    angs = []
+    off = 0
+    inv = jnp.asarray(_freqs(head_dim, theta))
+    for i, sec in enumerate(sections):
+        angs.append(positions3[i][..., None].astype(jnp.float32)
+                    * inv[off:off + sec])
+        off += sec
+    ang = jnp.concatenate(angs, axis=-1)                      # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def positional(cfg, positions):
+    """Dispatch helper: returns a function q_or_k -> rotated q_or_k."""
+    if cfg.rope == "none":
+        return lambda x: x
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:  # text-only stream: t=h=w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return lambda x: apply_mrope(x, positions, cfg.rope_theta)
+    return lambda x: apply_rope(x, positions, cfg.rope_theta)

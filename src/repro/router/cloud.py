@@ -1,0 +1,60 @@
+"""Scheduling cloud (paper §4.2, Fig. 3 right).
+
+Hosts the deployed model replicas, receives the fractional z̃ from a local
+server, discretizes it back to an action S_t (Algorithm 2 for AWC — matroid
+swap rounding; Algorithm 3 for SUC/AIC — pairwise rounding) and dispatches
+generation. The cloud never sees raw user text — only token batches prepared
+by the local server (and in a real deployment, encrypted blobs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import rounding
+from repro.core.policies import PolicyConfig
+from repro.serving.engine import Engine, GenResult
+
+
+@dataclasses.dataclass
+class Replica:
+    """One deployed LLM: an engine + its pricing."""
+    name: str
+    engine: Engine
+    price_per_token: float       # normalized $/token
+
+
+class SchedulingCloud:
+    def __init__(self, pcfg: PolicyConfig, replicas: Sequence[Replica]):
+        assert len(replicas) == pcfg.k
+        self.pcfg = pcfg
+        self.replicas = list(replicas)
+
+    # ------------------------------------------------------------- rounding
+    def select(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        """Discretization rounding -> boolean action mask (K,)."""
+        if self.pcfg.kind == "awc":
+            mask = rounding.swap_round_np(z, self.pcfg.n, rng)
+        else:
+            mask = rounding.pairwise_round_np(z, rng)
+        mask = np.asarray(mask, bool)
+        if self.pcfg.kind in ("suc", "aic") and mask.sum() < self.pcfg.n:
+            # pad to the base-matroid size with the largest-z̃ leftovers
+            left = np.argsort(-np.where(mask, -np.inf, z))
+            for i in left:
+                if mask.sum() >= self.pcfg.n:
+                    break
+                mask[i] = True
+        return mask
+
+    # ------------------------------------------------------------- dispatch
+    def dispatch(self, arm: int, prompts: np.ndarray, max_new: int,
+                 seed: int = 0) -> tuple[GenResult, float]:
+        """Run generation on one replica; returns (result, realized cost)."""
+        rep = self.replicas[arm]
+        out = rep.engine.generate(prompts, max_new, seed=seed)
+        toks = prompts.shape[1] * prompts.shape[0] + int(out.out_lens.sum())
+        cost = toks * rep.price_per_token
+        return out, cost

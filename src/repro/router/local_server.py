@@ -1,0 +1,67 @@
+"""Local server (paper §4.1, Fig. 3 left).
+
+Handles user queries, stores feedback, maintains Eq.-(6) running stats, and
+solves the *relaxed* constrained problem — only the fractional vector z̃ is
+shipped to the scheduling cloud (raw queries and feedback never leave).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import confidence as cb
+from repro.core import relax
+from repro.core.policies import PolicyConfig
+
+
+@dataclasses.dataclass
+class FeedbackRecord:
+    round: int
+    arm: int
+    reward: float
+    cost: float
+
+
+class LocalServer:
+    """Owns user data + bandit statistics; emits relaxed selections."""
+
+    def __init__(self, pcfg: PolicyConfig):
+        self.pcfg = pcfg
+        k = pcfg.k
+        self.mu_hat = np.zeros(k)
+        self.c_hat = np.zeros(k)
+        self.t_mu = np.zeros(k)
+        self.t_c = np.zeros(k)
+        self.t = 0
+        self.log: list[FeedbackRecord] = []
+
+    # ------------------------------------------------------------ statistics
+    def _stats(self):
+        return {"mu_hat": jnp.asarray(self.mu_hat, jnp.float32),
+                "c_hat": jnp.asarray(self.c_hat, jnp.float32),
+                "t_mu": jnp.asarray(self.t_mu, jnp.float32),
+                "t_c": jnp.asarray(self.t_c, jnp.float32)}
+
+    def relaxed_selection(self) -> np.ndarray:
+        """One §4.1 step: UCB/LCB -> relaxed solve -> fractional z̃ (K,)."""
+        self.t += 1
+        p = self.pcfg
+        stats = self._stats()
+        t = jnp.asarray(self.t, jnp.float32)
+        mu_bar = cb.reward_ucb(stats, t, p.delta, p.alpha_mu)
+        c_low = cb.cost_lcb(stats, t, p.delta, p.alpha_c)
+        z = relax.solve_relaxed(p.kind, mu_bar, c_low, n=p.n, rho=p.rho)
+        return np.asarray(z)
+
+    def record(self, arm: int, reward: float, cost: float) -> None:
+        """Eq. (6) incremental update for one observed arm."""
+        self.mu_hat[arm] = ((self.mu_hat[arm] * self.t_mu[arm] + reward)
+                            / (self.t_mu[arm] + 1))
+        self.c_hat[arm] = ((self.c_hat[arm] * self.t_c[arm] + cost)
+                           / (self.t_c[arm] + 1))
+        self.t_mu[arm] += 1
+        self.t_c[arm] += 1
+        self.log.append(FeedbackRecord(self.t, arm, reward, cost))

@@ -1,0 +1,126 @@
+"""Optimizers in pure JAX (no optax available offline).
+
+AdamW with fp32 master weights and configurable moment dtype — the
+``moment_dtype="bfloat16"`` option halves optimizer HBM (the difference
+between fitting and not fitting 405B-class training on a 256-chip pod; see
+EXPERIMENTS.md §Dry-run). Also SGD-momentum for tests/ablation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    master_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_adamw(cfg: AdamWConfig, params):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "master": jax.tree.map(
+            lambda p: p.astype(jnp.dtype(cfg.master_dtype)), params),
+    }
+
+
+def abstract_adamw(cfg: AdamWConfig, abstract_p):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    sd = jax.ShapeDtypeStruct
+    return {
+        "step": sd((), jnp.int32),
+        "m": jax.tree.map(lambda p: sd(p.shape, mdt), abstract_p),
+        "v": jax.tree.map(lambda p: sd(p.shape, mdt), abstract_p),
+        "master": jax.tree.map(
+            lambda p: sd(p.shape, jnp.dtype(cfg.master_dtype)), abstract_p),
+    }
+
+
+def adamw_state_axes(param_axes):
+    """Optimizer state shares the params' logical sharding (fully FSDP)."""
+    return {"step": (), "m": param_axes, "v": param_axes,
+            "master": param_axes}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = lr_schedule(cfg, state["step"])
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        mh = m32 / b1c
+        vh = v32 / b2c
+        mw = master.astype(jnp.float32)
+        mw = mw - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                        + cfg.weight_decay * mw)
+        return (m32.astype(m.dtype), v32.astype(v.dtype),
+                mw.astype(master.dtype))
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m_new = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    v_new = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    master_new = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(
+        lambda mw, p: mw.astype(p.dtype), master_new, params)
+    new_state = {"step": step, "m": m_new, "v": v_new, "master": master_new}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------- SGD-momentum
+def init_sgdm(params, momentum: float = 0.9):
+    return {"step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def sgdm_update(grads, state, params, lr: float = 1e-2, momentum: float = 0.9):
+    mu = jax.tree.map(lambda b, g: momentum * b + g.astype(jnp.float32),
+                      state["mu"], grads)
+    new_params = jax.tree.map(
+        lambda p, b: (p.astype(jnp.float32) - lr * b).astype(p.dtype),
+        params, mu)
+    return new_params, {"step": state["step"] + 1, "mu": mu}, {}

@@ -1,0 +1,69 @@
+"""Distributed train / prefill / serve steps — the functions the dry-run
+lowers and the launchers run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.AdamWConfig, *,
+                    impl: str = "auto", remat: bool = True,
+                    microbatch: int = 1):
+    """One optimizer step. ``microbatch > 1`` splits the global batch into
+    that many sequential gradient-accumulation slices — activation temps
+    shrink ~linearly while FLOPs and collective volume per token stay
+    fixed (the memory lever for 405B-class training)."""
+
+    def loss_grads(params, batch):
+        def lf(p):
+            return M.loss_fn(cfg, p, batch, impl=impl, remat=remat)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def train_step(params, ostate, batch):
+        if microbatch == 1:
+            (loss, metrics), grads = loss_grads(params, batch)
+        else:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatch
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
+
+            def acc_body(carry, i):
+                gacc, lacc = carry
+                mb_batch = jax.tree.map(lambda x: slice_mb(i, x), batch)
+                (l, m), g = loss_grads(params, mb_batch)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(microbatch))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+            metrics = jax.tree.map(lambda a: a[-1], ms)
+        params, ostate, om = opt.adamw_update(ocfg, grads, ostate, params)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, ostate, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, impl: str = "auto"):
+    def prefill_step(params, batch):
+        logits, _ = M.forward(cfg, params, batch, impl=impl, remat=False)
+        return logits[:, -1, :]  # next-token logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, cache, pos):
+        logits, cache = M.decode_step(cfg, params, tokens, cache, pos)
+        return logits, cache
+    return serve_step

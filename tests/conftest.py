@@ -1,0 +1,12 @@
+import os
+
+# Smoke tests and benches see ONE device; only the dry-run forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,146 @@
+"""Integration tests for the online C2MAB-V loop (Algorithm 1) and the
+confidence-bound machinery (Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bandit, confidence as cb, metrics, rewards as R
+from repro.core.policies import PolicyConfig
+from repro.env import cost_model, feedback
+from repro.env.llm_profiles import default_rho, paper_pool
+
+T = 800
+SEEDS = 3
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return paper_pool("sciq")
+
+
+# ===================================================================== stats
+def test_update_stats_running_mean():
+    stats = cb.init_stats(3)
+    obs = jnp.array([1.0, 0.0, 1.0])
+    stats = cb.update_stats(stats, obs, jnp.array([0.5, 9.0, 1.0]),
+                            jnp.array([0.2, 9.0, 0.4]))
+    assert stats["mu_hat"][0] == pytest.approx(0.5)
+    assert stats["mu_hat"][1] == 0.0          # unobserved arm untouched
+    stats = cb.update_stats(stats, obs, jnp.array([1.0, 0.0, 0.0]),
+                            jnp.array([0.4, 0.0, 0.0]))
+    assert stats["mu_hat"][0] == pytest.approx(0.75)
+    assert stats["t_mu"][0] == 2
+
+
+def test_confidence_radius_shrinks():
+    stats = cb.init_stats(2)
+    t = jnp.asarray(100.0)
+    r1 = cb.radius(t, jnp.asarray(4.0), 2, 0.01)
+    r2 = cb.radius(t, jnp.asarray(64.0), 2, 0.01)
+    assert float(r2) < float(r1)
+    assert np.isinf(float(cb.radius(t, jnp.asarray(0.0), 2, 0.01)))
+
+
+def test_lemma1_coverage():
+    """Empirical check of Lemma 1: the CB radius covers the true mean with
+    frequency >= 1 - delta."""
+    rng = np.random.default_rng(0)
+    mu_true = 0.6
+    delta = 0.05
+    k, trials, draws = 1, 300, 50
+    miss = 0
+    for _ in range(trials):
+        x = rng.binomial(1, mu_true, draws)
+        hat = x.cumsum() / np.arange(1, draws + 1)
+        t_arr = np.arange(1, draws + 1)
+        rad = np.array([float(cb.radius(jnp.asarray(float(t)),
+                                        jnp.asarray(float(t)), k, delta))
+                        for t in t_arr[-1:]])
+        if abs(hat[-1] - mu_true) >= rad[0]:
+            miss += 1
+    assert miss / trials <= delta * 2 + 0.02
+
+
+# ===================================================================== env
+def test_sample_rewards_mean_matches_mu():
+    mu = jnp.array([0.1, 0.5, 0.9])
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    xs = jax.vmap(lambda k: cost_model.sample_rewards(k, mu))(keys)
+    assert np.allclose(np.asarray(xs).mean(0), np.asarray(mu), atol=0.03)
+
+
+def test_sample_costs_bounded_and_mean():
+    mc = jnp.array([0.2, 0.6])
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    ys = jax.vmap(lambda k: cost_model.sample_costs(k, mc))(keys)
+    ys = np.asarray(ys)
+    assert ys.min() >= 0 and ys.max() <= 1.0
+    assert np.allclose(ys.mean(0), np.asarray(mc), atol=0.03)
+
+
+def test_awc_cascade_feedback_prefix():
+    """AWC observes exactly the ascending-cost prefix ending at the first
+    success."""
+    mask = jnp.array([1.0, 1.0, 0.0, 1.0])
+    mean_cost = jnp.array([0.3, 0.1, 0.2, 0.5])   # order: 1, 0, 3
+    rewards = jnp.array([1.0, 0.0, 0.0, 1.0])      # arm1 fails, arm0 succeeds
+    obs = feedback.observe("awc", mask, rewards, mean_cost)
+    assert obs.tolist() == [1.0, 1.0, 0.0, 0.0]
+    # SUC observes everything selected
+    obs2 = feedback.observe("suc", mask, rewards, mean_cost)
+    assert obs2.tolist() == mask.tolist()
+
+
+# ===================================================================== sim
+@pytest.mark.parametrize("kind", ["awc", "suc", "aic"])
+def test_c2mabv_violation_decays_and_outperforms(pool, kind):
+    rho = default_rho(pool, kind, 4)
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=4, rho=rho, delta=1 / T)
+    res = bandit.simulate("c2mabv", pool, pcfg, T=T, seeds=SEEDS)
+    v = metrics.violation_curve(res.cost, rho)
+    # Thm 2: violation decays ~ sqrt(K/T)
+    assert v[:, -1].mean() <= v[:, T // 4].mean() + 1e-6
+    # action sizes respect the matroid
+    sizes = res.action.sum(-1)
+    if kind == "awc":
+        assert (sizes <= 4 + 1e-6).all()
+    else:
+        assert np.allclose(sizes, 4)
+
+
+def test_c2mabv_beats_cost_blind_on_ratio(pool):
+    kind = "awc"
+    rho = default_rho(pool, kind, 4)
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=4, rho=rho, delta=1 / T)
+    ours = bandit.simulate("c2mabv", pool, pcfg, T=T, seeds=SEEDS)
+    blind = bandit.simulate("cucb", pool, pcfg, T=T, seeds=SEEDS)
+    r_ours = metrics.reward_violation_ratio(ours.reward, ours.cost, rho)
+    r_blind = metrics.reward_violation_ratio(blind.reward, blind.cost, rho)
+    assert r_ours[:, -1].mean() > 2 * r_blind[:, -1].mean()
+
+
+def test_regret_sublinear(pool):
+    kind = "suc"
+    rho = default_rho(pool, kind, 4)
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=4, rho=rho, delta=1 / T,
+                        alpha_mu=1.0, alpha_c=0.05)
+    res = bandit.simulate("c2mabv", pool, pcfg, T=T, seeds=SEEDS)
+    r_opt = bandit.optimal_value(pool, pcfg)
+    reg = metrics.regret_curve(res.reward, r_opt, float(R.ALPHA[kind]))
+    # per-round regret in the last quarter is lower than in the first
+    first = reg[:, T // 4].mean() / (T // 4)
+    last = (reg[:, -1] - reg[:, 3 * T // 4]).mean() / (T // 4)
+    assert last <= first + 0.02
+
+
+def test_direct_policy_adheres_tighter(pool):
+    """App. E.3 / Fig. 11: Direct nearly eliminates violations."""
+    kind = "awc"
+    rho = default_rho(pool, kind, 4)
+    pcfg = PolicyConfig(kind=kind, k=pool.k, n=4, rho=rho, delta=1 / T)
+    rel = bandit.simulate("c2mabv", pool, pcfg, T=T, seeds=SEEDS)
+    dire = bandit.simulate("c2mabv_direct", pool, pcfg, T=T, seeds=SEEDS)
+    v_rel = metrics.violation_curve(rel.cost, rho)[:, -1].mean()
+    v_dir = metrics.violation_curve(dire.cost, rho)[:, -1].mean()
+    assert v_dir <= v_rel + 1e-6

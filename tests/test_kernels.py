@@ -1,0 +1,133 @@
+"""Per-kernel allclose vs the pure-jnp oracle (ref.py), swept over shapes
+and dtypes, in Pallas interpret mode (the TPU-target kernels run on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def tol(dtype):
+    return ATOL[dtype]
+
+
+# ============================================================ flash attention
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 4, 128, 64),      # MHA
+    (2, 8, 2, 256, 64),      # GQA 4x
+    (1, 4, 1, 128, 128),     # MQA, wide head
+    (2, 36 // 6, 2, 192, 64),  # non-pow2 seq/heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, h, kv, s, d, dtype):
+    k0 = jax.random.PRNGKey(0)
+    q = jax.random.normal(k0, (b, h, s, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(k0, 1),
+                          (b, kv, s, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(k0, 2),
+                          (b, kv, s, d), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    b, h, kv, s, d = 1, 4, 2, 256, 64
+    k0 = jax.random.PRNGKey(3)
+    q = jax.random.normal(k0, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, kv, s, d))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    b, h, kv, s, d = 1, 2, 2, 128, 64
+    k0 = jax.random.PRNGKey(4)
+    q = jax.random.normal(k0, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (b, kv, s, d))
+    out = ops.flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ============================================================ decode attention
+@pytest.mark.parametrize("b,h,kv,t,d,pos", [
+    (2, 4, 2, 256, 64, 100),
+    (1, 8, 1, 512, 128, 511),   # full cache
+    (4, 4, 4, 128, 64, 0),      # first token
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kv, t, d, pos, dtype):
+    k0 = jax.random.PRNGKey(1)
+    q = jax.random.normal(k0, (b, 1, h, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(jax.random.fold_in(k0, 1),
+                           (b, t, kv, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(jax.random.fold_in(k0, 2),
+                           (b, t, kv, d), jnp.float32).astype(dtype)
+    out = ops.decode_attention(q, kc, vc, jnp.int32(pos), bk=64)
+    want = ref.decode_attention(q, kc, vc, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol(dtype))
+
+
+# ============================================================ SSD chunk
+@pytest.mark.parametrize("b,nc,l,h,p,n", [
+    (1, 2, 32, 2, 16, 8),
+    (2, 4, 64, 4, 32, 16),
+    (1, 1, 128, 8, 64, 64),    # mamba2-780m-like chunk
+])
+def test_ssd_chunk(b, nc, l, h, p, n):
+    k0 = jax.random.PRNGKey(2)
+    xd = jax.random.normal(k0, (b, nc, l, h, p))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(k0, 1),
+                                   (b, nc, l, h))) * 0.1
+    acum = jnp.cumsum(a, axis=2)
+    bm = jax.random.normal(jax.random.fold_in(k0, 2), (b, nc, l, n))
+    cm = jax.random.normal(jax.random.fold_in(k0, 3), (b, nc, l, n))
+    y, st = ops.ssd_chunk(xd, acum, bm, cm)
+    y2, st2 = ref.ssd_chunk(xd, acum, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st2), atol=1e-4)
+
+
+# ===================================================== chunked full-seq SSM
+def test_ssd_chunked_matches_sequential_scan():
+    """The chunked dual form equals the naive recurrent scan."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    k0 = jax.random.PRNGKey(5)
+    x = jax.random.normal(k0, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k0, 1),
+                                           (b, s, h)))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(k0, 2), (h,)))
+    bmat = jax.random.normal(jax.random.fold_in(k0, 3), (b, s, n))
+    cmat = jax.random.normal(jax.random.fold_in(k0, 4), (b, s, n))
+    y_chunk, _ = ssd_chunked(x, dt, a, bmat, cmat, chunk=16,
+                             return_state=True)
+
+    # naive recurrence: h_t = exp(a dt_t) h_{t-1} + dt_t B_t x_t
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(a * dtt)                             # (h,)
+        state = state * decay[:, None, None] + (
+            dtt[:, None, None] * xt[:, :, None] * bt[None, None, :])
+        y = jnp.einsum("hpn,n->hp", state, ct)
+        return state, y
+
+    ys = []
+    st = jnp.zeros((h, p, n))
+    for t in range(s):
+        st, y = step(st, (x[0, t], dt[0, t], bmat[0, t], cmat[0, t]))
+        ys.append(y)
+    want = jnp.stack(ys)[None]
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(want),
+                               atol=2e-4, rtol=2e-3)

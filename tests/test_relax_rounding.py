@@ -1,0 +1,121 @@
+"""Property tests for the relaxed solvers (Eq. 3/4/5) and the rounding
+algorithms (Algorithm 2 / Algorithm 3) — the paper's §4 machinery."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import relax, rewards as R, rounding
+
+instances = st.integers(0, 10_000)
+
+
+def make_instance(seed, k_min=3, k_max=9):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(k_min, k_max))
+    n = int(rng.integers(1, k))
+    mu = rng.uniform(0.05, 0.99, k)
+    c = rng.uniform(0.01, 0.6, k)
+    # keep the instance feasible: budget >= cheapest n-subset
+    rho = float(np.sort(c)[:n].sum() * rng.uniform(1.05, 2.5))
+    return mu, c, n, rho
+
+
+# ===================================================================== relax
+@given(instances)
+@settings(max_examples=40, deadline=None)
+def test_lp_feasible_and_beats_integral(seed):
+    """The relaxed optimum is feasible and >= the best integral action."""
+    mu, c, n, rho = make_instance(seed)
+    for kind in ("suc", "aic"):
+        z = np.array(relax.solve_relaxed(
+            kind, jnp.array(mu, jnp.float32), jnp.array(c, jnp.float32),
+            n=n, rho=rho))
+        assert np.all(z >= -1e-6) and np.all(z <= 1 + 1e-6)
+        assert float(np.dot(c, z)) <= rho * 1.002 + 1e-5
+        assert abs(z.sum() - n) < 1e-3         # base matroid: Σz == N
+        _, best = relax.solve_direct(kind, mu, c, n, rho)
+        val = float(R.relaxed_reward(kind, jnp.array(z), jnp.array(mu)))
+        assert val >= best - 1e-3, (kind, val, best)
+
+
+@given(instances)
+@settings(max_examples=25, deadline=None)
+def test_awc_frank_wolfe_alpha_guarantee(seed):
+    """AWC continuous greedy attains ≥ (1−1/e)·OPT (Lemma 3)."""
+    mu, c, n, rho = make_instance(seed)
+    z = np.array(relax.solve_relaxed(
+        "awc", jnp.array(mu, jnp.float32), jnp.array(c, jnp.float32),
+        n=n, rho=rho))
+    assert float(np.dot(c, z)) <= rho * 1.01 + 1e-4
+    assert z.sum() <= n + 1e-3
+    _, opt = relax.solve_direct("awc", mu, c, n, rho)
+    val = float(R.relaxed_reward("awc", jnp.array(z), jnp.array(mu)))
+    assert val >= (1 - 1 / np.e) * opt - 5e-3
+
+
+def test_direct_enumeration_small():
+    mu = np.array([0.9, 0.1, 0.5])
+    c = np.array([0.9, 0.1, 0.2])
+    s, v = relax.solve_direct("suc", mu, c, n=2, rho=0.35)
+    assert set(np.flatnonzero(s)) == {1, 2}
+    assert v == pytest.approx(0.6)
+
+
+# ===================================================================== rounding
+@given(instances)
+@settings(max_examples=20, deadline=None)
+def test_pairwise_round_marginal_preservation(seed):
+    """Algorithm 3 preserves marginals: E[1_S] == z̃ (App. C.2)."""
+    rng = np.random.default_rng(seed)
+    k = 6
+    z = rng.uniform(0, 1, k)
+    trials = 3000
+    acc = np.zeros(k)
+    for i in range(trials):
+        acc += rounding.pairwise_round_np(z, np.random.default_rng(i))
+    est = acc / trials
+    assert np.allclose(est, z, atol=0.05), (est, z)
+
+
+def test_pairwise_round_jax_matches_numpy_distribution():
+    z = np.array([0.3, 0.7, 0.5, 0.5])
+    trials = 2000
+    keys = jax.random.split(jax.random.PRNGKey(0), trials)
+    masks = jax.vmap(lambda k: rounding.pairwise_round(jnp.array(z), k))(keys)
+    est = np.asarray(masks).mean(0)
+    assert np.allclose(est, z, atol=0.06)
+    # cardinality is preserved when Σz is integral
+    assert np.all(np.asarray(masks).sum(1) == 2)
+
+
+@given(instances)
+@settings(max_examples=15, deadline=None)
+def test_swap_round_valid_base(seed):
+    """Algorithm 2 returns a set of size ≤ N with E[1_S] ≈ z̃."""
+    rng = np.random.default_rng(seed)
+    k, n = 6, 3
+    z = rng.uniform(0, 1, k)
+    z = z / z.sum() * (n - 0.5)          # Σz < n: inclusive matroid case
+    trials = 1500
+    acc = np.zeros(k)
+    for i in range(trials):
+        m = rounding.swap_round_np(z, n, np.random.default_rng(i))
+        assert m.sum() <= n + 1e-9
+        acc += m
+    assert np.allclose(acc / trials, z, atol=0.07)
+
+
+def test_rounding_expected_reward_dominates_relaxed():
+    """E[r(S)] ≥ r̃(z̃) — the convexity step the regret proof rests on."""
+    mu = np.array([0.8, 0.6, 0.4, 0.3])
+    z = np.array([0.5, 0.5, 0.7, 0.3])
+    vals = []
+    for i in range(4000):
+        m = rounding.pairwise_round_np(z, np.random.default_rng(i))
+        vals.append(float(R.set_reward("awc", jnp.array(m), jnp.array(mu))))
+    relaxed = float(R.relaxed_reward("awc", jnp.array(z), jnp.array(mu)))
+    assert np.mean(vals) >= relaxed - 0.02
