@@ -1,0 +1,129 @@
+"""Fleet throughput: batched multi-tenant scan vs sequential tenant loops.
+
+Measures rounds/sec for M tenants advanced T rounds three ways:
+  batched    — one `fleet.simulate_fleet` call, vmap across tenants inside
+               a single jitted lax.scan (the fleet architecture)
+  sequential — per tenant, per round: ONE jitted protocol step per host
+               call. This is the seed router architecture ("solve one
+               relaxation, round one action per call" — the pre-fleet
+               `LocalServer` loop), with the step itself fully optimized,
+               so the comparison isolates host-loop vs in-device batching.
+  fleet_solo — M separate single-tenant `simulate_fleet` scans (scan over
+               rounds but no tenant batching; jit cache shared)
+
+Acceptance (ISSUE 2): ≥10× batched rounds/sec at 64 tenants vs the 64
+sequential single-tenant loops, on CPU.
+
+  PYTHONPATH=src python benchmarks/fleet_throughput.py \
+      [--tenants 1 4 16 64] [--rounds 256] [--kind suc] [--mixed] [--smoke]
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_fleet_cfg(pool, kinds, T):
+    from repro.core.policies import PolicyConfig
+    from repro.env.llm_profiles import default_rho
+    from repro.router import fleet
+    pcfgs = [PolicyConfig(kind=k, k=pool.k, n=4,
+                          rho=default_rho(pool, k, 4), delta=1.0 / T)
+             for k in kinds]
+    return fleet.fleet_config(pcfgs)
+
+
+def run_single_tenant_loop(pool, cfg, T, key, step_fn):
+    """The pre-fleet shape: one jitted round per host call, T host calls.
+
+    The kind dispatch is pruned to this tenant's own kind — same per-step
+    program the batched path would compile for it — so the comparison
+    isolates host-loop overhead, not branch pruning."""
+    from repro.router import fleet
+    state = fleet.init_tenant_state(1, pool.k, keys=key[None])
+    kinds_present = fleet._kinds_present(cfg)
+    for t in range(1, T + 1):
+        state, _ = step_fn(state, jnp.float32(t), cfg, kinds_present)
+    return state
+
+
+def bench_point(pool, kinds, T):
+    """Returns rounds/sec (batched, sequential, fleet_solo) for M tenants."""
+    from repro.router import fleet
+    m = len(kinds)
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    cfg = make_fleet_cfg(pool, kinds, T)
+    solo_cfgs = [make_fleet_cfg(pool, kinds[i:i + 1], T) for i in range(m)]
+    mu = jnp.asarray(pool.mu, jnp.float32)
+    mc = jnp.asarray(pool.mean_cost, jnp.float32)
+    levels = tuple(pool.reward_levels)
+
+    @functools.partial(jax.jit, static_argnames=("kinds_present",))
+    def one_round(state, t, cfg1, kinds_present):  # M=1, one protocol round
+        return jax.vmap(
+            lambda row, c: fleet._tenant_step(row, t, mu, mc, levels, c,
+                                              kinds_present)
+        )(state, cfg1)
+
+    # warmup (compile every program shape, incl. each per-kind step)
+    fleet.simulate_fleet(pool, cfg, T=T, keys=keys)
+    fleet.simulate_fleet(pool, solo_cfgs[0], T=T, keys=keys[:1])
+    for kind in dict.fromkeys(kinds):
+        run_single_tenant_loop(pool, solo_cfgs[kinds.index(kind)], 2,
+                               keys[0], one_round)
+
+    t0 = time.perf_counter()
+    fleet.simulate_fleet(pool, cfg, T=T, keys=keys)     # np output = synced
+    dt_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(m):
+        state = run_single_tenant_loop(pool, solo_cfgs[i], T, keys[i],
+                                       one_round)
+    jax.block_until_ready(state)      # in-order dispatch: last drains all
+    dt_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(m):
+        fleet.simulate_fleet(pool, solo_cfgs[i], T=T, keys=keys[i:i + 1])
+    dt_solo = time.perf_counter() - t0
+
+    return m * T / dt_batch, m * T / dt_seq, m * T / dt_solo
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, nargs="+",
+                    default=[1, 4, 16, 64])
+    ap.add_argument("--rounds", type=int, default=256)
+    ap.add_argument("--kind", default="suc", choices=["awc", "suc", "aic"])
+    ap.add_argument("--mixed", action="store_true",
+                    help="cycle awc/suc/aic across tenants")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (~30 s)")
+    args = ap.parse_args(argv)
+
+    from repro.env.llm_profiles import paper_pool
+    if args.smoke:
+        args.tenants, args.rounds = [1, 8], 64
+
+    pool = paper_pool("sciq")
+    kinds_all = ("awc", "suc", "aic")
+    print("tenants,rounds,batched_rps,sequential_rps,fleet_solo_rps,speedup")
+    for m in args.tenants:
+        kinds = [kinds_all[i % 3] if args.mixed else args.kind
+                 for i in range(m)]
+        b_rps, s_rps, f_rps = bench_point(pool, kinds, args.rounds)
+        print(f"{m},{args.rounds},{b_rps:.1f},{s_rps:.1f},{f_rps:.1f},"
+              f"{b_rps / s_rps:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,11 @@ One scan step = one protocol round (paper §3 Online Learning Protocol):
   local server act() -> cloud rounds to S_t -> env draws X_t, y_t ->
   partial feedback F_t -> Eq.(6) update.
 
+The paper's own policy ("c2mabv") is a thin wrapper over the multi-tenant
+fleet driver (`router.fleet`): each seed becomes one tenant of a uniform
+fleet, so the simulation and the deployment path share one jitted program.
+Baseline policies keep the local scan below.
+
 Per-round logs are the raw material for every §6 figure.
 """
 from __future__ import annotations
@@ -33,12 +38,24 @@ class SimResult:
 
 def simulate(policy_name: str, pool: Pool, pcfg: PolicyConfig, *,
              T: int, seeds: int = 10, sync_every: int = 1,
-             unroll: int = 1, **policy_kw) -> SimResult:
+             unroll: int = 1, use_fleet: bool = True,
+             **policy_kw) -> SimResult:
     """Run `seeds` independent simulations of T rounds.
 
     ``sync_every > 1`` is the App.-E.3 asynchronous local-cloud variant: the
     cloud re-coordinates the action only every B rounds; between syncs the
-    previous action is reused (feedback still accumulates each round)."""
+    previous action is reused (feedback still accumulates each round).
+    ``use_fleet=False`` forces the legacy per-seed scan even for "c2mabv" —
+    the reference the fleet path is tested against."""
+    if use_fleet and policy_name == "c2mabv" and not policy_kw:
+        # seeds-as-tenants: delegate to the fleet path (same PRNG discipline
+        # per seed as the scan below, so trajectories are reproducible).
+        from repro.router import fleet
+        fcfg = fleet.fleet_config([pcfg] * seeds, sync_every=sync_every)
+        keys = jax.random.split(jax.random.PRNGKey(0), seeds)
+        res = fleet.simulate_fleet(pool, fcfg, T=T, keys=keys, unroll=unroll)
+        return SimResult(res.reward, res.cost, res.action, res.observed)
+
     act = make_policy(policy_name, pcfg, **policy_kw)
     mu = jnp.asarray(pool.mu, jnp.float32)
     mean_cost = jnp.asarray(pool.mean_cost, jnp.float32)

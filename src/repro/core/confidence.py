@@ -19,6 +19,13 @@ def init_stats(k: int) -> Dict[str, jnp.ndarray]:
     return {"mu_hat": z, "c_hat": z, "t_mu": z, "t_c": z}
 
 
+def init_stats_batch(m: int, k: int) -> Dict[str, jnp.ndarray]:
+    """Fleet layout: one row of Eq.-(6) statistics per tenant. Every update
+    in this module is elementwise, so (M, K) arrays flow through unchanged."""
+    z = jnp.zeros((m, k), jnp.float32)
+    return {"mu_hat": z, "c_hat": z, "t_mu": z, "t_c": z}
+
+
 def radius(t, t_k, k: int, delta: float):
     """ρ_{t,·} = sqrt( ln(2π²K t³ / 3δ) / (2 T) );  +inf when T == 0."""
     t = jnp.maximum(t.astype(jnp.float32), 1.0)
@@ -28,13 +35,13 @@ def radius(t, t_k, k: int, delta: float):
 
 
 def reward_ucb(stats, t, delta: float, alpha_mu: float):
-    k = stats["mu_hat"].shape[0]
+    k = stats["mu_hat"].shape[-1]     # arm count in both (K,) and (M, K)
     r = radius(t, stats["t_mu"], k, delta)
     return jnp.minimum(stats["mu_hat"] + alpha_mu * r, 1.0)
 
 
 def cost_lcb(stats, t, delta: float, alpha_c: float):
-    k = stats["c_hat"].shape[0]
+    k = stats["c_hat"].shape[-1]
     r = radius(t, stats["t_c"], k, delta)
     return jnp.maximum(stats["c_hat"] - alpha_c * r, 0.0)
 

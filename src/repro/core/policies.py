@@ -45,13 +45,7 @@ def _pad_to_n(mask, scores, n: int, equality: bool):
     """Ensure |S| == n when the matroid is a base (SUC/AIC)."""
     if not equality:
         return mask
-    deficit = n - mask.sum().astype(jnp.int32)
-    # add the highest-score unselected arms
-    fill_scores = jnp.where(mask > 0, -jnp.inf, scores)
-    order = jnp.argsort(-fill_scores)
-    ranks = jnp.argsort(order)
-    add = (ranks < deficit).astype(jnp.float32)
-    return jnp.clip(mask + add, 0.0, 1.0)
+    return rounding.pad_to_n_dyn(mask, scores, n, True)
 
 
 # ===================================================================== C2MAB-V

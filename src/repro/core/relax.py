@@ -15,6 +15,10 @@ O(K log K · iters) routine that vmaps across simulation seeds.
   AIC: lp_topn(ln μ̄)                 (Eq. 5 log-transform, α = 1)
   AWC: continuous greedy — Frank-Wolfe on the multilinear extension with
        lp_topn as the linear-maximization oracle (Eq. 3, α = 1 − 1/e).
+
+Two entry points: `solve_relaxed` (static kind/n, the single-instance path)
+and `solve_batch` = vmap(`solve_relaxed_ix`) — traced per-tenant kind index,
+N, and ρ, dispatched via lax.switch, for the multi-tenant fleet driver.
 """
 from __future__ import annotations
 
@@ -44,15 +48,40 @@ def _topn_given_lambda(w, c, n: int, lam, equality: bool):
     return z
 
 
-def lp_topn(w, c, n: int, rho: float, equality: bool):
-    """max ⟨w,z⟩ s.t. Σz (=|≤) n, ⟨c,z⟩ ≤ rho, z∈[0,1]^K."""
+def stable_desc_ranks(score):
+    """Stable descending ranks by O(K²) pairwise count — no sort.
+
+    rank_i = #{j : s_j > s_i} + #{j < i : s_j == s_i}; identical tie order to
+    stable argsort and lax.top_k (lower index wins). XLA CPU lowers sorts as
+    a per-row loop, so inside the vmapped fleet solver this elementwise form
+    is ~30× faster at 64 tenants and scales with batch width."""
+    k = score.shape[-1]
+    idx = jnp.arange(k)
+    beats = (score[..., None, :] > score[..., :, None]) | (
+        (score[..., None, :] == score[..., :, None])
+        & (idx[None, :] < idx[:, None]))
+    return beats.sum(-1)
+
+
+def _topn_given_lambda_dyn(w, c, n, lam, equality: bool):
+    """`_topn_given_lambda` with a *traced* cardinality n.
+
+    Rank-threshold formulation so n can vary per tenant under vmap."""
+    score = w - lam * c
+    z = (stable_desc_ranks(score) < n).astype(jnp.float32)
+    if not equality:
+        z = z * (score > 0)
+    return z
+
+
+def _lp_topn_impl(vertex, w, c, n, rho, equality: bool):
     w = w.astype(jnp.float32)
     c = c.astype(jnp.float32)
-    z0 = _topn_given_lambda(w, c, n, 0.0, equality)
+    z0 = vertex(w, c, n, 0.0, equality)
     cost0 = jnp.dot(c, z0)
 
     def cost_at(lam):
-        return jnp.dot(c, _topn_given_lambda(w, c, n, lam, equality))
+        return jnp.dot(c, vertex(w, c, n, lam, equality))
 
     # double λ until feasible
     def dbl(_, lam):
@@ -62,12 +91,12 @@ def lp_topn(w, c, n: int, rho: float, equality: bool):
     # Bisection carrying the *vertices* on each side of the breakpoint —
     # recomputing them from λ at the end loses the feasible vertex once
     # float32 makes lam_lo == lam_hi (ties then resolve arbitrarily).
-    z_hi0 = _topn_given_lambda(w, c, n, lam_hi0, equality)
+    z_hi0 = vertex(w, c, n, lam_hi0, equality)
 
     def bis(_, carry):
         lo, hi, z_l, z_h = carry
         mid = 0.5 * (lo + hi)
-        z_m = _topn_given_lambda(w, c, n, mid, equality)
+        z_m = vertex(w, c, n, mid, equality)
         feas = jnp.dot(c, z_m) <= rho
         lo_n = jnp.where(feas, lo, mid)
         hi_n = jnp.where(feas, mid, hi)
@@ -86,6 +115,16 @@ def lp_topn(w, c, n: int, rho: float, equality: bool):
     return jnp.where(cost0 <= rho, z0, z_mix)
 
 
+def lp_topn(w, c, n: int, rho: float, equality: bool):
+    """max ⟨w,z⟩ s.t. Σz (=|≤) n, ⟨c,z⟩ ≤ rho, z∈[0,1]^K."""
+    return _lp_topn_impl(_topn_given_lambda, w, c, n, rho, equality)
+
+
+def lp_topn_dyn(w, c, n, rho, equality: bool):
+    """`lp_topn` with traced (n, rho) — the per-tenant fleet/vmap path."""
+    return _lp_topn_impl(_topn_given_lambda_dyn, w, c, n, rho, equality)
+
+
 def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float):
     """Fractional z̃ solving the relaxed problem for the given reward model."""
     if kind == "suc":
@@ -101,6 +140,61 @@ def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float):
         return jax.lax.fori_loop(0, FW_STEPS, fw,
                                  jnp.zeros_like(mu_bar, jnp.float32))
     raise ValueError(kind)
+
+
+def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
+                     kinds_present: Tuple[int, ...] = (0, 1, 2)):
+    """`solve_relaxed` with a *traced* reward-model index (R.KIND_INDEX
+    order: awc=0, suc=1, aic=2) and traced (n, rho) — lax.switch dispatch so
+    a mixed-kind fleet solves every tenant inside one jitted program.
+
+    ``kinds_present`` (static) prunes the dispatch to the kinds a fleet
+    actually contains: under vmap the switch evaluates *every* branch for
+    the whole batch, and the AWC Frank-Wolfe branch alone is ~16 LP solves —
+    a uniform SUC/AIC fleet must not pay for it.
+
+    CONTRACT: every runtime kind_ix value must appear in kinds_present — an
+    absent kind silently dispatches to another kind's branch (the index is
+    traced, so it cannot be validated here). Derive it host-side from the
+    actual batch, as `router.fleet._kinds_present` does."""
+
+    def awc():
+        def fw(i, z):
+            g = R.awc_multilinear_grad(z, mu_bar)
+            v = lp_topn_dyn(g, c_low, n, rho, equality=False)
+            return z + v / FW_STEPS
+        return jax.lax.fori_loop(0, FW_STEPS, fw,
+                                 jnp.zeros_like(mu_bar, jnp.float32))
+
+    def suc():
+        return lp_topn_dyn(mu_bar, c_low, n, rho, equality=True)
+
+    def aic():
+        w = jnp.log(jnp.clip(mu_bar, R.EPS, 1.0))
+        return lp_topn_dyn(w, c_low, n, rho, equality=True)
+
+    branches = (awc, suc, aic)
+    present = tuple(sorted(set(kinds_present)))
+    if len(present) == 1:
+        return branches[present[0]]()
+    lut = np.zeros(len(branches), np.int32)      # kind index -> branch slot
+    for slot, kind in enumerate(present):
+        lut[kind] = slot
+    slot = jnp.asarray(lut)[kind_ix]
+    return jax.lax.switch(slot, [branches[kind] for kind in present])
+
+
+def solve_batch(kind_ix, mu_bar, c_low, n, rho,
+                kinds_present: Tuple[int, ...] = (0, 1, 2)):
+    """Batched relax solve: one row per tenant, per-tenant task kind.
+
+    kind_ix (M,) int32, mu_bar/c_low (M, K), n (M,) int32, rho (M,) — vmap
+    of `solve_relaxed_ix`; under vmap the lax.switch evaluates each present
+    branch once for the whole batch and selects per row."""
+    return jax.vmap(
+        lambda ki, mb, cl, nn, rr: solve_relaxed_ix(ki, mb, cl, nn, rr,
+                                                    kinds_present)
+    )(kind_ix, mu_bar, c_low, n, rho)
 
 
 # ===================================================================== direct

@@ -17,6 +17,9 @@ import jax
 import jax.numpy as jnp
 
 KINDS = ("awc", "suc", "aic")
+# dense index per reward model — the fleet path carries kinds as int32 so a
+# mixed-kind tenant batch dispatches via lax.switch inside one jitted program
+KIND_INDEX = {k: i for i, k in enumerate(KINDS)}
 # offline approximation-oracle ratio per reward model (paper App. C.2)
 ALPHA = {"awc": 1.0 - 1.0 / jnp.e, "suc": 1.0, "aic": 1.0}
 EPS = 1e-9
@@ -34,6 +37,16 @@ def set_reward(kind: str, mask, mu):
         # empty-product over unselected arms = 1
         return jnp.prod(jnp.where(mask > 0, mu, 1.0), axis=-1)
     raise ValueError(kind)
+
+
+def set_reward_ix(kind_ix, mask, mu):
+    """`set_reward` with a *traced* KIND_INDEX — per-tenant fleet dispatch."""
+    mask = mask.astype(jnp.float32)
+    mu = mu.astype(jnp.float32)
+    return jax.lax.switch(kind_ix, [
+        lambda: 1.0 - jnp.prod(1.0 - mu * mask, axis=-1),
+        lambda: jnp.sum(mu * mask, axis=-1),
+        lambda: jnp.prod(jnp.where(mask > 0, mu, 1.0), axis=-1)])
 
 
 def relaxed_reward(kind: str, z, mu):

@@ -1,8 +1,9 @@
 """Discretization rounding (paper §4.2, Appendix B) — the scheduling cloud.
 
-Algorithm 3 (SUC/AIC; pairwise "pipage" rounding) in two flavours:
-  - `pairwise_round`  : jit-able lax.while_loop (used inside scanned sims)
-  - `pairwise_round_np`: numpy reference
+Algorithm 3 (SUC/AIC; pairwise "pipage" rounding) in three flavours:
+  - `pairwise_round`      : jit-able lax.while_loop (used inside scanned sims)
+  - `pairwise_round_batch`: vmapped rows — the multi-tenant cloud path
+  - `pairwise_round_np`   : numpy reference
 Both preserve marginals exactly: E[1_S] = z̃ — the property the regret proof
 (E[r̃(1_S)] ≥ r̃(z̃), per-direction convexity) and the violation martingale
 rest on.
@@ -60,6 +61,27 @@ def pairwise_round(z, key):
     u = jax.random.uniform(k1)
     z = jnp.where(f, (u < z).astype(jnp.float32), jnp.round(z))
     return z
+
+
+def pairwise_round_batch(z, keys):
+    """Batched Algorithm 3: z (M, K), keys (M, 2) — one row per tenant.
+
+    vmap of the while_loop body is select-masked, so each row's RNG stream
+    and result are identical to running `pairwise_round` on it alone."""
+    return jax.vmap(pairwise_round)(z, keys)
+
+
+def pad_to_n_dyn(mask, scores, n, equality):
+    """Pad |S| up to the base-matroid size n with the highest-score
+    unselected arms; identity when `equality` is False (AWC's inclusive
+    matroid). n and equality may be traced — the per-tenant fleet path."""
+    from repro.core.relax import stable_desc_ranks
+    n = jnp.asarray(n, jnp.int32)
+    deficit = n - mask.sum().astype(jnp.int32)
+    fill = jnp.where(mask > 0, -jnp.inf, scores)
+    add = (stable_desc_ranks(fill) < deficit).astype(jnp.float32)
+    padded = jnp.clip(mask + add, 0.0, 1.0)
+    return jnp.where(equality, padded, mask)
 
 
 def pairwise_round_np(z, rng: np.random.Generator) -> np.ndarray:

@@ -16,13 +16,7 @@ import jax.numpy as jnp
 SUCCESS_LEVEL = 1.0
 
 
-def observe(kind: str, action_mask, rewards, mean_cost):
-    """Returns feedback mask F_t (K,) float in {0,1}.
-
-    action_mask (K,) — the selected set; rewards (K,) — this round's draws.
-    """
-    if kind in ("suc", "aic"):
-        return action_mask
+def _awc_cascade(action_mask, rewards, mean_cost):
     # AWC cascade: order selected arms by cost ascending; observe a prefix
     # ending at the first success (or the whole set if none succeed).
     order = jnp.argsort(jnp.where(action_mask > 0, mean_cost, jnp.inf))
@@ -34,3 +28,20 @@ def observe(kind: str, action_mask, rewards, mean_cost):
     obs_sorted = sel_sorted * before_or_at.astype(jnp.float32)
     inv = jnp.argsort(order)
     return obs_sorted[inv]
+
+
+def observe(kind: str, action_mask, rewards, mean_cost):
+    """Returns feedback mask F_t (K,) float in {0,1}.
+
+    action_mask (K,) — the selected set; rewards (K,) — this round's draws.
+    """
+    if kind in ("suc", "aic"):
+        return action_mask
+    return _awc_cascade(action_mask, rewards, mean_cost)
+
+
+def observe_ix(kind_ix, action_mask, rewards, mean_cost):
+    """`observe` with a *traced* rewards.KIND_INDEX (awc=0) — per-tenant
+    fleet dispatch; SUC/AIC observe the whole selection (o* = 1)."""
+    cascade = _awc_cascade(action_mask, rewards, mean_cost)
+    return jnp.where(kind_ix == 0, cascade, action_mask)

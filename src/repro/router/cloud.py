@@ -1,21 +1,42 @@
 """Scheduling cloud (paper §4.2, Fig. 3 right).
 
-Hosts the deployed model replicas, receives the fractional z̃ from a local
-server, discretizes it back to an action S_t (Algorithm 2 for AWC — matroid
-swap rounding; Algorithm 3 for SUC/AIC — pairwise rounding) and dispatches
-generation. The cloud never sees raw user text — only token batches prepared
-by the local server (and in a real deployment, encrypted blobs).
+Hosts the deployed model replicas — ONE pool shared by every tenant local
+server — receives fractional z̃ vectors, discretizes them back to actions
+S_t (Algorithm 2 for AWC — matroid swap rounding; Algorithm 3 for SUC/AIC —
+pairwise rounding) and dispatches generation. The cloud never sees raw user
+text — only token batches prepared by the local servers (and in a real
+deployment, encrypted blobs).
+
+`round_batch` is the fleet-scale entry point: a jittable batched Algorithm 3
+over an (M, K) block of tenant z̃ rows with per-tenant matroid sizes, the
+cloud-side half of `router.fleet`.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rewards as R
 from repro.core import rounding
 from repro.core.policies import PolicyConfig
 from repro.serving.engine import Engine, GenResult
+
+
+@jax.jit
+def round_batch(z, keys, n, kind_ix):
+    """Batched discretization for M tenants sharing this cloud.
+
+    z (M, K) fractional selections, keys (M, 2), n (M,) int32 matroid sizes,
+    kind_ix (M,) rewards.KIND_INDEX. Pairwise rounding (Algorithm 3 — also
+    valid for AWC, App. C.2 ❶) vmapped per row, then padded to the base-
+    matroid size for SUC/AIC tenants using z̃ as the fill score."""
+    masks = rounding.pairwise_round_batch(z, keys)
+    equality = kind_ix != R.KIND_INDEX["awc"]
+    return jax.vmap(rounding.pad_to_n_dyn)(masks, z, n, equality)
 
 
 @dataclasses.dataclass
@@ -27,10 +48,25 @@ class Replica:
 
 
 class SchedulingCloud:
+    """One replica pool + rounding service, shared across tenants."""
+
     def __init__(self, pcfg: PolicyConfig, replicas: Sequence[Replica]):
         assert len(replicas) == pcfg.k
         self.pcfg = pcfg
         self.replicas = list(replicas)
+
+    @property
+    def prices(self) -> np.ndarray:
+        """Per-replica pricing vector (K,) — the fleet's shared cost side."""
+        return np.asarray([r.price_per_token for r in self.replicas])
+
+    def select_batch(self, z: np.ndarray, keys) -> np.ndarray:
+        """Jittable batched rounding for M tenants with this cloud's pcfg."""
+        m = np.asarray(z).shape[0]
+        n = jnp.full((m,), self.pcfg.n, jnp.int32)
+        kind_ix = jnp.full((m,), R.KIND_INDEX[self.pcfg.kind], jnp.int32)
+        return np.asarray(round_batch(jnp.asarray(z, jnp.float32), keys,
+                                      n, kind_ix))
 
     # ------------------------------------------------------------- rounding
     def select(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:

@@ -1,0 +1,203 @@
+"""Multi-tenant fleet driver (paper §4, Fig. 3 — at fleet scale).
+
+The deployment story is many local servers sharing one scheduling cloud.
+Here a *tenant* is one local server's bandit instance; the whole fleet lives
+in a flat `TenantState` pytree of (M, K) arrays plus per-tenant
+`FleetConfig` scalars (task kind, N, ρ, δ, α's, sync period). One round
+advances every tenant at once:
+
+    UCB/LCB -> relax.solve_batch (per-tenant kind via lax.switch)
+            -> batched pairwise rounding against the shared replica pool
+            -> env draws + partial feedback -> Eq.-(6) update,
+
+all vmapped across tenants, and `simulate_fleet` runs T rounds × M tenants
+inside a single jitted lax.scan. `core.bandit.simulate("c2mabv")`
+(seeds-as-tenants) and `router.local_server.LocalServer` (M = 1) are thin
+wrappers over this path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import confidence as cb
+from repro.core import relax
+from repro.core import rewards as R
+from repro.core import rounding
+from repro.core.policies import PolicyConfig
+from repro.env import cost_model, feedback
+from repro.env.llm_profiles import Pool
+
+AWC_IX = R.KIND_INDEX["awc"]
+
+
+class FleetConfig(NamedTuple):
+    """Per-tenant policy scalars, one entry per tenant (all shape (M,))."""
+    kind_ix: jnp.ndarray       # int32 index into rewards.KINDS
+    n: jnp.ndarray             # int32 matroid size
+    rho: jnp.ndarray           # float32 budget threshold
+    delta: jnp.ndarray         # float32 confidence level
+    alpha_mu: jnp.ndarray      # float32 reward-UCB scale
+    alpha_c: jnp.ndarray       # float32 cost-LCB scale
+    sync_every: jnp.ndarray    # int32 cloud re-coordination period (App. E.3)
+
+    @property
+    def m(self) -> int:
+        return self.kind_ix.shape[0]
+
+
+class TenantState(NamedTuple):
+    """The whole fleet's mutable state as a flat, scannable pytree."""
+    stats: Dict[str, jnp.ndarray]   # Eq.-(6) running stats, each (M, K)
+    prev_mask: jnp.ndarray          # (M, K) last dispatched action
+    t: jnp.ndarray                  # (M,) float32 rounds elapsed per tenant
+    key: jnp.ndarray                # (M, 2) uint32 per-tenant PRNG keys
+
+
+def fleet_config(pcfgs: Sequence[PolicyConfig],
+                 sync_every=1) -> FleetConfig:
+    """Pack per-tenant PolicyConfigs into the flat fleet layout.
+
+    ``sync_every`` is an int shared by all tenants or a length-M sequence."""
+    m = len(pcfgs)
+    ks = {p.k for p in pcfgs}
+    if len(ks) != 1:
+        raise ValueError(f"all tenants must share the replica pool size, "
+                         f"got k in {sorted(ks)}")
+    sync = np.full(m, sync_every) if np.isscalar(sync_every) else \
+        np.asarray(sync_every)
+    if sync.shape != (m,):
+        raise ValueError(f"sync_every must be a scalar or length-{m} "
+                         f"sequence, got shape {sync.shape}")
+    return FleetConfig(
+        kind_ix=jnp.asarray([R.KIND_INDEX[p.kind] for p in pcfgs], jnp.int32),
+        n=jnp.asarray([p.n for p in pcfgs], jnp.int32),
+        rho=jnp.asarray([p.rho for p in pcfgs], jnp.float32),
+        delta=jnp.asarray([p.delta for p in pcfgs], jnp.float32),
+        alpha_mu=jnp.asarray([p.alpha_mu for p in pcfgs], jnp.float32),
+        alpha_c=jnp.asarray([p.alpha_c for p in pcfgs], jnp.float32),
+        sync_every=jnp.asarray(sync, jnp.int32))
+
+
+def init_tenant_state(m: int, k: int,
+                      keys: Optional[jnp.ndarray] = None,
+                      seed: int = 0) -> TenantState:
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    return TenantState(stats=cb.init_stats_batch(m, k),
+                       prev_mask=jnp.zeros((m, k), jnp.float32),
+                       t=jnp.zeros((m,), jnp.float32),
+                       key=jnp.asarray(keys))
+
+
+# ================================================================= per-tenant
+def _tenant_act(stats, t, key, cfg: FleetConfig,
+                kinds_present: Tuple[int, ...]):
+    """One tenant's §4.1+§4.2 step (row shapes): UCB/LCB -> relaxed solve ->
+    pairwise rounding -> base-matroid padding. All cfg fields are traced;
+    ``kinds_present`` statically prunes the kind dispatch (see relax)."""
+    mu_bar = cb.reward_ucb(stats, t, cfg.delta, cfg.alpha_mu)
+    c_low = cb.cost_lcb(stats, t, cfg.delta, cfg.alpha_c)
+    z = relax.solve_relaxed_ix(cfg.kind_ix, mu_bar, c_low, cfg.n, cfg.rho,
+                               kinds_present)
+    mask = rounding.pairwise_round(z, key)
+    return rounding.pad_to_n_dyn(mask, mu_bar, cfg.n, cfg.kind_ix != AWC_IX)
+
+
+def _tenant_step(row: TenantState, t, mu, mean_cost, levels,
+                 cfg: FleetConfig, kinds_present: Tuple[int, ...]):
+    """One protocol round for one tenant (vmapped by the fleet driver)."""
+    key, ka, kr, kc = jax.random.split(row.key, 4)
+    mask = jax.lax.cond(
+        (t - 1) % cfg.sync_every == 0,
+        lambda: _tenant_act(row.stats, t, ka, cfg, kinds_present),
+        lambda: row.prev_mask)
+    x = cost_model.sample_rewards(kr, mu, levels)
+    y = cost_model.sample_costs(kc, mean_cost)
+    if AWC_IX in kinds_present:
+        obs = feedback.observe_ix(cfg.kind_ix, mask, x, mean_cost)
+    else:
+        obs = mask      # SUC/AIC observe the whole selection; skip the
+        # cascade's batched argsorts entirely for AWC-free fleets
+    stats = cb.update_stats(row.stats, obs, x, y)
+    exp_reward = R.set_reward_ix(cfg.kind_ix, mask, mu)
+    cost_t = jnp.sum(y * obs)                 # Eq. (1) charges F_t
+    new_row = TenantState(stats=stats, prev_mask=mask,
+                          t=t.astype(jnp.float32), key=key)
+    return new_row, (exp_reward, cost_t, mask, obs)
+
+
+# ================================================================== fleet run
+@functools.partial(jax.jit,
+                   static_argnames=("T", "levels", "unroll", "kinds_present"))
+def _scan_fleet(state0: TenantState, cfg: FleetConfig, mu, mean_cost,
+                T: int, levels: Tuple[float, ...], unroll: int,
+                kinds_present: Tuple[int, ...]):
+    def scan_step(state, t):
+        return jax.vmap(
+            lambda row, c: _tenant_step(row, t, mu, mean_cost, levels, c,
+                                        kinds_present)
+        )(state, cfg)
+
+    return jax.lax.scan(scan_step, state0, jnp.arange(1, T + 1),
+                        unroll=unroll)
+
+
+def _kinds_present(cfg: FleetConfig) -> Tuple[int, ...]:
+    return tuple(sorted(set(np.asarray(cfg.kind_ix).tolist())))
+
+
+@functools.partial(jax.jit, static_argnames=("kinds_present",))
+def _relaxed_batch(stats, t, cfg: FleetConfig,
+                   kinds_present: Tuple[int, ...]):
+    def one(stats_row, t_row, cfg_row):
+        mu_bar = cb.reward_ucb(stats_row, t_row, cfg_row.delta,
+                               cfg_row.alpha_mu)
+        c_low = cb.cost_lcb(stats_row, t_row, cfg_row.delta, cfg_row.alpha_c)
+        return relax.solve_relaxed_ix(cfg_row.kind_ix, mu_bar, c_low,
+                                      cfg_row.n, cfg_row.rho, kinds_present)
+    return jax.vmap(one)(stats, t, cfg)
+
+
+def relaxed_batch(stats, t, cfg: FleetConfig):
+    """Batched §4.1 local-server step: stats (M, K), t (M,) -> z̃ (M, K).
+
+    This is what a real local-server pod calls per sync round; the cloud
+    side then discretizes with `cloud.round_batch`."""
+    return _relaxed_batch(stats, t, cfg, _kinds_present(cfg))
+
+
+@dataclasses.dataclass
+class FleetResult:
+    reward: np.ndarray     # (M, T) expected set reward r(S_t; μ)
+    cost: np.ndarray       # (M, T) realized budget-accounted cost
+    action: np.ndarray     # (M, T, K) dispatched masks
+    observed: np.ndarray   # (M, T, K) feedback masks
+    state: TenantState     # final fleet state (stats/t/keys)
+
+
+def simulate_fleet(pool: Pool, cfg: FleetConfig, *, T: int,
+                   keys: Optional[jnp.ndarray] = None, seed: int = 0,
+                   unroll: int = 1) -> FleetResult:
+    """Advance M tenants T rounds against the shared replica pool.
+
+    Every tenant draws its own rewards/costs (its users' queries) from the
+    shared pool profile; per-tenant PRNG keys make trajectories reproducible
+    tenant-by-tenant regardless of fleet size."""
+    m = cfg.m
+    state0 = init_tenant_state(m, pool.k, keys=keys, seed=seed)
+    mu = jnp.asarray(pool.mu, jnp.float32)
+    mean_cost = jnp.asarray(pool.mean_cost, jnp.float32)
+    state, (rew, cost, act, obs) = _scan_fleet(
+        state0, cfg, mu, mean_cost, T, tuple(pool.reward_levels), unroll,
+        _kinds_present(cfg))
+    return FleetResult(reward=np.asarray(rew).T,
+                       cost=np.asarray(cost).T,
+                       action=np.asarray(act).transpose(1, 0, 2),
+                       observed=np.asarray(obs).transpose(1, 0, 2),
+                       state=jax.tree_util.tree_map(np.asarray, state))

@@ -3,18 +3,26 @@
 Handles user queries, stores feedback, maintains Eq.-(6) running stats, and
 solves the *relaxed* constrained problem — only the fractional vector z̃ is
 shipped to the scheduling cloud (raw queries and feedback never leave).
+
+Since the fleet refactor this class owns no ad-hoc numpy state: it is the
+M = 1 degenerate case of `router.fleet` — its statistics live in a
+`TenantState` pytree row and every solve goes through the same jitted
+batched path (`fleet.relaxed_batch`) that drives the full fleet.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import confidence as cb
-from repro.core import relax
 from repro.core.policies import PolicyConfig
+from repro.router import fleet
+
+_update_stats = jax.jit(cb.update_stats)   # elementwise: (1, K) flows through
 
 
 @dataclasses.dataclass
@@ -30,38 +38,48 @@ class LocalServer:
 
     def __init__(self, pcfg: PolicyConfig):
         self.pcfg = pcfg
-        k = pcfg.k
-        self.mu_hat = np.zeros(k)
-        self.c_hat = np.zeros(k)
-        self.t_mu = np.zeros(k)
-        self.t_c = np.zeros(k)
-        self.t = 0
+        self._fcfg = fleet.fleet_config([pcfg])
+        self.state = fleet.init_tenant_state(1, pcfg.k)
         self.log: list[FeedbackRecord] = []
 
     # ------------------------------------------------------------ statistics
-    def _stats(self):
-        return {"mu_hat": jnp.asarray(self.mu_hat, jnp.float32),
-                "c_hat": jnp.asarray(self.c_hat, jnp.float32),
-                "t_mu": jnp.asarray(self.t_mu, jnp.float32),
-                "t_c": jnp.asarray(self.t_c, jnp.float32)}
+    @property
+    def t(self) -> int:
+        return int(self.state.t[0])
+
+    @t.setter
+    def t(self, value: int) -> None:
+        self.state = self.state._replace(
+            t=jnp.full((1,), float(value), jnp.float32))
+
+    @property
+    def mu_hat(self) -> np.ndarray:
+        return np.asarray(self.state.stats["mu_hat"][0])
+
+    @property
+    def c_hat(self) -> np.ndarray:
+        return np.asarray(self.state.stats["c_hat"][0])
+
+    @property
+    def t_mu(self) -> np.ndarray:
+        return np.asarray(self.state.stats["t_mu"][0])
+
+    @property
+    def t_c(self) -> np.ndarray:
+        return np.asarray(self.state.stats["t_c"][0])
 
     def relaxed_selection(self) -> np.ndarray:
         """One §4.1 step: UCB/LCB -> relaxed solve -> fractional z̃ (K,)."""
-        self.t += 1
-        p = self.pcfg
-        stats = self._stats()
-        t = jnp.asarray(self.t, jnp.float32)
-        mu_bar = cb.reward_ucb(stats, t, p.delta, p.alpha_mu)
-        c_low = cb.cost_lcb(stats, t, p.delta, p.alpha_c)
-        z = relax.solve_relaxed(p.kind, mu_bar, c_low, n=p.n, rho=p.rho)
-        return np.asarray(z)
+        self.t = self.t + 1
+        z = fleet.relaxed_batch(self.state.stats, self.state.t, self._fcfg)
+        return np.asarray(z[0])
 
     def record(self, arm: int, reward: float, cost: float) -> None:
         """Eq. (6) incremental update for one observed arm."""
-        self.mu_hat[arm] = ((self.mu_hat[arm] * self.t_mu[arm] + reward)
-                            / (self.t_mu[arm] + 1))
-        self.c_hat[arm] = ((self.c_hat[arm] * self.t_c[arm] + cost)
-                           / (self.t_c[arm] + 1))
-        self.t_mu[arm] += 1
-        self.t_c[arm] += 1
+        k = self.pcfg.k
+        obs = jnp.zeros((1, k), jnp.float32).at[0, arm].set(1.0)
+        x = jnp.zeros((1, k), jnp.float32).at[0, arm].set(float(reward))
+        y = jnp.zeros((1, k), jnp.float32).at[0, arm].set(float(cost))
+        self.state = self.state._replace(
+            stats=_update_stats(self.state.stats, obs, x, y))
         self.log.append(FeedbackRecord(self.t, arm, reward, cost))

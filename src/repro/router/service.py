@@ -1,6 +1,12 @@
 """End-to-end multi-LLM service (paper Fig. 3): query -> relax (local) ->
 round + dispatch (cloud) -> model generation -> feedback -> Eq.(6) update.
 
+This is the M = 1 degenerate case of the fleet architecture: the
+`LocalServer` below is a one-row `router.fleet.TenantState` wrapper, so the
+service's selection math is the same jitted batched program that advances a
+whole fleet — only the host-side engine dispatch loop is per-tenant. For
+closed-loop simulation at fleet scale use `router.fleet.simulate_fleet`.
+
 The quality signal is *measured output quality*: the synthetic query stream
 is the planted-Markov LM from the data pipeline, and reward = fraction of
 generated tokens that are valid successors under the planted bigram graph —
@@ -30,9 +36,9 @@ class RoundLog:
 
 
 class MultiLLMService:
-    """One local server + one scheduling cloud, synchronous by default;
-    ``batch_size > 1`` gives the App.-E.3 asynchronous variant (the cloud
-    re-coordinates only every B feedbacks)."""
+    """One tenant (local server) + the shared scheduling cloud, synchronous
+    by default; ``batch_size > 1`` gives the App.-E.3 asynchronous variant
+    (the cloud re-coordinates only every B feedbacks)."""
 
     def __init__(self, pcfg: PolicyConfig, cloud: SchedulingCloud,
                  data: SyntheticLM, *, prompt_len: int = 16,

@@ -55,7 +55,10 @@ def use_mesh(mesh: Optional[Mesh]):
     _CTX.mesh = mesh
     try:
         if mesh is not None:
-            with jax.sharding.set_mesh(mesh):
+            # jax >= 0.5 spells the ambient-mesh context jax.sharding.set_mesh;
+            # on 0.4.x the Mesh object itself is the context manager.
+            setter = getattr(jax.sharding, "set_mesh", None)
+            with (setter(mesh) if setter is not None else mesh):
                 yield mesh
         else:
             yield None

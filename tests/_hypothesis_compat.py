@@ -1,0 +1,89 @@
+"""Optional-`hypothesis` shim.
+
+When the real package is installed (see requirements-dev.txt) this module
+re-exports it untouched. When it is absent — the sandboxed CI image bakes in
+only the jax toolchain — the property tests fall back to seeded random
+examples driven by ``pytest.mark.parametrize``: each test runs
+min(max_examples, _FALLBACK_CAP) times with a deterministic per-example rng,
+drawing from a tiny strategy mimic. No shrinking, no database — just enough
+of the `given`/`settings`/`st` surface for this repo's tests to collect and
+exercise the same properties.
+"""
+from __future__ import annotations
+
+import os
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES", 20))
+    _DATA = object()        # sentinel: st.data() draws from the test's rng
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _DataDrawer:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.example(self._rng)
+
+    class st:  # noqa: N801 — mimic the `strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _DATA
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        # In this repo @given sits above @settings, so it sees the attribute.
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples", 20), _FALLBACK_CAP)
+
+            @pytest.mark.parametrize("_compat_seed", range(n))
+            def wrapper(_compat_seed):
+                rng = np.random.default_rng(_compat_seed * 7919 + 17)
+                args = [_DataDrawer(rng) if s is _DATA else s.example(rng)
+                        for s in strategies]
+                return fn(*args)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

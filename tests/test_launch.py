@@ -84,6 +84,8 @@ with use_mesh(mesh):
     fn, args, sh = build_case(cfg, shape, mesh, remat=False)
     compiled = jax.jit(fn, in_shardings=sh).lower(*args).compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, list):      # jax 0.4.x: one dict per device program
+    cost = cost[0] if cost else {}
 print(json.dumps({"flops": cost.get("flops", -1),
                   "ndev": mesh.devices.size}))
 """

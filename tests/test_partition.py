@@ -3,7 +3,7 @@ optimality vs enumeration, and group-respecting rounding."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import partition as pm
 from repro.core import rewards as R

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import relax, rewards as R, rounding
 
@@ -100,6 +100,7 @@ def test_swap_round_valid_base(seed):
     k, n = 6, 3
     z = rng.uniform(0, 1, k)
     z = z / z.sum() * (n - 0.5)          # Σz < n: inclusive matroid case
+    z = np.minimum(z, 1.0)               # stay in the polytope: z̃ ∈ [0,1]^K
     trials = 1500
     acc = np.zeros(k)
     for i in range(trials):
@@ -107,6 +108,44 @@ def test_swap_round_valid_base(seed):
         assert m.sum() <= n + 1e-9
         acc += m
     assert np.allclose(acc / trials, z, atol=0.07)
+
+
+@given(instances)
+@settings(max_examples=15, deadline=None)
+def test_pairwise_round_np_jax_agree_support_cardinality(seed):
+    """Both Algorithm-3 flavours stay on z̃'s support, keep z̃==1 arms, and
+    land on cardinality ⌈Σz̃⌉/⌊Σz̃⌋ (exact when Σz̃ is integral)."""
+    rng = np.random.default_rng(seed)
+    k = 7
+    z = rng.uniform(0, 1, k)
+    z[rng.integers(k)] = 1.0              # a saturated arm must survive
+    for i in range(25):
+        m_np = rounding.pairwise_round_np(z, np.random.default_rng(i))
+        m_jx = np.asarray(rounding.pairwise_round(
+            jnp.array(z, jnp.float32), jax.random.PRNGKey(i)))
+        for m in (m_np, m_jx):
+            assert set(np.unique(m)) <= {0.0, 1.0}
+            assert np.all(m[z >= 1 - rounding.EPS] == 1.0)   # keep saturated
+            assert np.all(m[z <= rounding.EPS] == 0.0)       # stay on support
+            assert m.sum() in (np.floor(z.sum()), np.ceil(z.sum()))
+
+
+def test_batched_rounding_matches_per_row():
+    """pairwise_round_batch row i == pairwise_round(z[i], keys[i]) exactly,
+    and the dynamic pad agrees with the padded per-row result."""
+    rng = np.random.default_rng(3)
+    m, k, n = 8, 6, 3
+    z = jnp.asarray(rng.uniform(0, 1, (m, k)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(42), m)
+    batched = np.asarray(rounding.pairwise_round_batch(z, keys))
+    for i in range(m):
+        row = np.asarray(rounding.pairwise_round(z[i], keys[i]))
+        assert np.array_equal(batched[i], row), i
+    padded = np.asarray(jax.vmap(rounding.pad_to_n_dyn, in_axes=(0, 0, None,
+                                                                 None))(
+        jnp.asarray(batched), z, jnp.int32(n), True))
+    assert np.all(padded.sum(-1) >= n)
+    assert np.all(padded >= batched)      # padding only adds arms
 
 
 def test_rounding_expected_reward_dominates_relaxed():
