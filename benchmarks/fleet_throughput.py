@@ -1,21 +1,27 @@
-"""Fleet throughput: batched multi-tenant scan vs sequential tenant loops.
+"""Fleet throughput: batched multi-tenant scan, solver engines, host loops.
 
-Measures rounds/sec for M tenants advanced T rounds three ways:
-  batched    — one `fleet.simulate_fleet` call, vmap across tenants inside
-               a single jitted lax.scan (the fleet architecture)
-  sequential — per tenant, per round: ONE jitted protocol step per host
-               call. This is the seed router architecture ("solve one
-               relaxation, round one action per call" — the pre-fleet
-               `LocalServer` loop), with the step itself fully optimized,
-               so the comparison isolates host-loop vs in-device batching.
-  fleet_solo — M separate single-tenant `simulate_fleet` scans (scan over
-               rounds but no tenant batching; jit cache shared)
+Measures rounds/sec for M tenants advanced T rounds:
+  batched[grid]   — one `fleet.simulate_fleet` call on the grid parametric-
+                    LP engine (the default fleet architecture)
+  batched[bisect] — same scan on the retained PR-2 reference solver
+                    (sequential double-then-bisect) — the baseline the
+                    ISSUE-3 acceptance compares against, in the same run
+  sequential      — per tenant, per round: ONE jitted protocol step per
+                    host call (the seed router architecture), grid engine
+  fleet_solo      — M separate single-tenant scans (no tenant batching)
 
-Acceptance (ISSUE 2): ≥10× batched rounds/sec at 64 tenants vs the 64
-sequential single-tenant loops, on CPU.
+Every (tenants, workload, mode) cell is sampled REPS times interleaved and
+the best rate is kept (shared-box noise suppression). Results land in
+BENCH_fleet.json at the repo root (where CI uploads it as an artifact) —
+rounds/sec per tenant count, solver variant, workload, plus the commit —
+so future PRs have a perf trajectory; the recorded sweep is committed.
+
+Acceptance (ISSUE 3): ≥2× batched[grid] vs batched[bisect] at 64 tenants
+on CPU, with the AWC/mixed fleets showing the largest gain.
 
   PYTHONPATH=src python benchmarks/fleet_throughput.py \
-      [--tenants 1 4 16 64] [--rounds 256] [--kind suc] [--mixed] [--smoke]
+      [--tenants 1 4 16 64] [--rounds 256] [--kind suc] [--mixed] \
+      [--workloads suc awc mixed] [--reps 3] [--smoke] [--json PATH]
 """
 import os
 
@@ -23,11 +29,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
 import functools
+import json
+import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+KINDS_ALL = ("awc", "suc", "aic")
+
+
+def make_kinds(workload, m):
+    if workload == "mixed":
+        return [KINDS_ALL[i % 3] for i in range(m)]
+    return [workload] * m
 
 
 def make_fleet_cfg(pool, kinds, T):
@@ -41,11 +57,7 @@ def make_fleet_cfg(pool, kinds, T):
 
 
 def run_single_tenant_loop(pool, cfg, T, key, step_fn):
-    """The pre-fleet shape: one jitted round per host call, T host calls.
-
-    The kind dispatch is pruned to this tenant's own kind — same per-step
-    program the batched path would compile for it — so the comparison
-    isolates host-loop overhead, not branch pruning."""
+    """The pre-fleet shape: one jitted round per host call, T host calls."""
     from repro.router import fleet
     state = fleet.init_tenant_state(1, pool.k, keys=key[None])
     kinds_present = fleet._kinds_present(cfg)
@@ -54,12 +66,29 @@ def run_single_tenant_loop(pool, cfg, T, key, step_fn):
     return state
 
 
-def bench_point(pool, kinds, T):
-    """Returns rounds/sec (batched, sequential, fleet_solo) for M tenants."""
+def bench_engines(pool, kinds, T, reps):
+    """Best-of-reps batched rounds/sec for both solver engines, interleaved
+    so machine noise hits both paths alike."""
     from repro.router import fleet
     m = len(kinds)
     keys = jax.random.split(jax.random.PRNGKey(0), m)
     cfg = make_fleet_cfg(pool, kinds, T)
+    best = {"grid": 0.0, "bisect": 0.0}
+    for eng in best:       # compile both before timing anything
+        fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
+    for _ in range(reps):
+        for eng in best:
+            t0 = time.perf_counter()
+            fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
+            best[eng] = max(best[eng], m * T / (time.perf_counter() - t0))
+    return best
+
+
+def bench_host_loops(pool, kinds, T):
+    """Rounds/sec for the per-call host loop and the unbatched scan."""
+    from repro.router import fleet
+    m = len(kinds)
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
     solo_cfgs = [make_fleet_cfg(pool, kinds[i:i + 1], T) for i in range(m)]
     mu = jnp.asarray(pool.mu, jnp.float32)
     mc = jnp.asarray(pool.mean_cost, jnp.float32)
@@ -72,16 +101,10 @@ def bench_point(pool, kinds, T):
                                               kinds_present)
         )(state, cfg1)
 
-    # warmup (compile every program shape, incl. each per-kind step)
-    fleet.simulate_fleet(pool, cfg, T=T, keys=keys)
     fleet.simulate_fleet(pool, solo_cfgs[0], T=T, keys=keys[:1])
     for kind in dict.fromkeys(kinds):
         run_single_tenant_loop(pool, solo_cfgs[kinds.index(kind)], 2,
                                keys[0], one_round)
-
-    t0 = time.perf_counter()
-    fleet.simulate_fleet(pool, cfg, T=T, keys=keys)     # np output = synced
-    dt_batch = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     for i in range(m):
@@ -94,35 +117,78 @@ def bench_point(pool, kinds, T):
     for i in range(m):
         fleet.simulate_fleet(pool, solo_cfgs[i], T=T, keys=keys[i:i + 1])
     dt_solo = time.perf_counter() - t0
+    return m * T / dt_seq, m * T / dt_solo
 
-    return m * T / dt_batch, m * T / dt_seq, m * T / dt_solo
+
+def git_commit():
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        sha = subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=here,
+            text=True).strip()
+        dirty = subprocess.run(["git", "diff", "--quiet", "HEAD"],
+                               cwd=here).returncode != 0
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tenants", type=int, nargs="+",
-                    default=[1, 4, 16, 64])
+    ap.add_argument("--tenants", type=int, nargs="+", default=[1, 4, 16, 64])
     ap.add_argument("--rounds", type=int, default=256)
-    ap.add_argument("--kind", default="suc", choices=["awc", "suc", "aic"])
+    ap.add_argument("--kind", default=None, choices=KINDS_ALL)
     ap.add_argument("--mixed", action="store_true",
-                    help="cycle awc/suc/aic across tenants")
+                    help="cycle awc/suc/aic across tenants (legacy flag)")
+    ap.add_argument("--workloads", nargs="+", default=None,
+                    choices=list(KINDS_ALL) + ["mixed"],
+                    help="fleet compositions to sweep (default: --kind if "
+                         "given, else the representative mixed fleet)")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="interleaved timing repetitions (best kept)")
+    ap.add_argument("--host-loops", action="store_true",
+                    help="also time the per-call and unbatched host loops")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI configuration (~30 s)")
+                    help="tiny CI configuration (~1 min)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: BENCH_fleet.json here)")
     args = ap.parse_args(argv)
 
     from repro.env.llm_profiles import paper_pool
     if args.smoke:
-        args.tenants, args.rounds = [1, 8], 64
+        args.tenants, args.rounds, args.reps = [1, 8], 64, 1
+    if args.workloads:
+        workloads = args.workloads
+    elif args.kind and not args.mixed:
+        workloads = [args.kind]
+    else:
+        workloads = ["mixed"]
 
     pool = paper_pool("sciq")
-    kinds_all = ("awc", "suc", "aic")
-    print("tenants,rounds,batched_rps,sequential_rps,fleet_solo_rps,speedup")
-    for m in args.tenants:
-        kinds = [kinds_all[i % 3] if args.mixed else args.kind
-                 for i in range(m)]
-        b_rps, s_rps, f_rps = bench_point(pool, kinds, args.rounds)
-        print(f"{m},{args.rounds},{b_rps:.1f},{s_rps:.1f},{f_rps:.1f},"
-              f"{b_rps / s_rps:.2f}")
+    out = {"commit": git_commit(), "rounds": args.rounds,
+           "backend": jax.default_backend(), "reps": args.reps,
+           "results": []}
+    print("tenants,rounds,workload,grid_rps,bisect_rps,engine_speedup")
+    for workload in workloads:
+        for m in args.tenants:
+            kinds = make_kinds(workload, m)
+            rates = bench_engines(pool, kinds, args.rounds, args.reps)
+            row = {"tenants": m, "workload": workload,
+                   "engine_rps": {k: round(v, 1) for k, v in rates.items()},
+                   "speedup": round(rates["grid"] / rates["bisect"], 3)}
+            if args.host_loops:
+                seq, solo = bench_host_loops(pool, kinds, args.rounds)
+                row["sequential_rps"] = round(seq, 1)
+                row["fleet_solo_rps"] = round(solo, 1)
+            out["results"].append(row)
+            print(f"{m},{args.rounds},{workload},{rates['grid']:.1f},"
+                  f"{rates['bisect']:.1f},{row['speedup']:.2f}")
+
+    path = args.json or os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "BENCH_fleet.json")
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=1)
+    print(f"# wrote {os.path.abspath(path)}")
 
 
 if __name__ == "__main__":

@@ -43,6 +43,16 @@ def main():
         t2 = bench(lambda: ref.decode_attention(q, kc, vc, pos))
         print(f"decode_attention,B{b}H{h}KV{kv}T{t}D{d},{t1:.1f},{t2:.1f}")
 
+    from repro.kernels import topn_lp as tl
+    for (b, k) in [(512, 9), (4096, 9), (1024, 128)]:
+        score = jax.random.normal(k0, (b, k))
+        cost = jax.random.uniform(jax.random.fold_in(k0, 1), (b, k))
+        n = jax.random.randint(jax.random.fold_in(k0, 2), (b,), 1, k + 1)
+        t1 = bench(lambda: tl.topn_lp(score, cost, n, equality=True,
+                                      interpret=True))
+        t2 = bench(lambda: ref.topn_lp(score, cost, n, equality=True))
+        print(f"topn_lp,B{b}K{k},{t1:.1f},{t2:.1f}")
+
     for (b, nc, l, h, p, n) in [(1, 8, 128, 8, 64, 64)]:
         xd = jax.random.normal(k0, (b, nc, l, h, p))
         a = -jnp.abs(jax.random.normal(jax.random.fold_in(k0, 1),

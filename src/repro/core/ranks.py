@@ -1,0 +1,123 @@
+"""Stable descending ranks + top-n selections — the shared selection core.
+
+Every selection in the repo (Lagrangian vertices in `core.relax`, the grid
+engine's scalar cost probes, base-matroid padding in `core.rounding`) goes
+through this module, built around the stable rank formula
+
+  rank_i = #{j : s_j > s_i} + #{j < i : s_j == s_i}
+
+One scoped exception to cross-path tie identity: the grid engine's CPU
+lowering (`relax._grid_tail`) resolves a probe that lands *exactly on* a
+pairwise crossing λ by cost direction rather than by index — consistent
+within that engine (ranks stay a permutation) but not bit-identical to the
+bisect engine's vertex at that same λ. Engines are decision-equivalent
+(equal LP objective), not vertex-identical.
+
+i.e. stable descending order, lower index wins ties — the exact tie order of
+a stable argsort and of `lax.top_k`. The O(K²) pairwise-count form is
+sort-free: XLA CPU lowers sorts as a per-row loop, so inside vmapped fleet
+programs this elementwise form is ~30× faster at 64 tenants and scales with
+batch width. On TPU the same reduction is available as a tiled Pallas kernel
+(`repro.kernels.topn_lp`) that never materializes the (B, K, K) comparison
+tensor.
+
+FLOAT HAZARD (why the `lagrangian_*` family exists): ranking a *computed*
+score tensor s = w − λ·c reads its producer through two different
+broadcasts. XLA freely duplicates the producer into each side with
+different FMA contraction, so the two sides can compare differently-rounded
+copies of the same value; near a score crossing that yields `s_i > s_j` AND
+`s_j > s_i` simultaneously — both arms "beaten", the "ranks" no longer a
+permutation, and the top-n cost of a selection that exists at no real λ.
+(`jax.lax.optimization_barrier` does not lower on this backend, so it
+cannot pin one copy.) The `lagrangian_*` functions therefore never form
+s = w − λ·c at all: they compare (w_j − w_i) > λ·(c_j − c_i). Subtractions
+of raw inputs and a lone multiply feeding a comparison each have a unique
+IEEE rounding — there is no mul→add edge for the compiler to contract — so
+any duplicated copy is bit-identical and the induced order is always a
+strict total order, under every fusion decision.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stable_desc_ranks(score):
+    """Stable descending ranks by O(K²) pairwise count — no sort.
+
+    Broadcasts over leading axes: score (..., K) -> int ranks (..., K).
+    For scores of the parametric form w − λ·c use `lagrangian_ranks`
+    instead (see the module docstring's float hazard)."""
+    k = score.shape[-1]
+    idx = jnp.arange(k)
+    beats = (score[..., None, :] > score[..., :, None]) | (
+        (score[..., None, :] == score[..., :, None])
+        & (idx[None, :] < idx[:, None]))
+    return beats.sum(-1)
+
+
+def topn_mask(score, n, equality: bool):
+    """{0,1} mask of the top-n entries by score, stable tie order.
+
+    score (..., K); n int or (...,) broadcastable. When ``equality`` is
+    False (inclusive matroid) entries with score <= 0 are dropped."""
+    z = (stable_desc_ranks(score) < jnp.asarray(n)[..., None]).astype(
+        jnp.float32)
+    if not equality:
+        z = z * (score > 0)
+    return z
+
+
+def topn_lp_cost(score, cost, n, equality: bool):
+    """Σ cost over the top-n-by-score entries — the pure-JAX oracle for the
+    Pallas `topn_lp` kernel.
+
+    score/cost (..., K), n int or (...,) -> (...,) float32. Only the scalar
+    reduction is formed; the selection mask is fused away by XLA.
+
+    The mask is combined *arithmetically* (float multiply), never as
+    `pred & pred` feeding a select+reduce: this repo's XLA CPU miscompiles
+    that fused pattern, sporadically zeroing a lane of the reduction
+    (observed as an arm vanishing from the top-n cost at λ's nowhere near a
+    tie). The multiply form — the same one `topn_mask` and the fleet's
+    vertex selections always used — lowers correctly."""
+    mask = (stable_desc_ranks(score) < jnp.asarray(n)[..., None]).astype(
+        jnp.float32)
+    if not equality:
+        mask = mask * (score > 0)
+    return (mask * cost.astype(jnp.float32)).sum(-1)
+
+
+# ================================================== parametric (λ-batch) form
+def lagrangian_ranks(w, c, lams):
+    """Ranks of the Lagrangian scores w − λ·c for a whole λ batch.
+
+    w/c (K,), lams (G,) -> int ranks (G, K). FMA-proof crossing form: the
+    comparison s_j > s_i is evaluated as (w_j − w_i) > λ·(c_j − c_i), so no
+    subtraction of a product ever feeds a comparison (module docstring)."""
+    dw = w[None, :] - w[:, None]            # [i, j] = w_j − w_i
+    dc = c[None, :] - c[:, None]
+    lhs = lams[:, None, None] * dc[None]    # lone mul: unique rounding
+    k = w.shape[-1]
+    idx = jnp.arange(k)
+    beats = (dw[None] > lhs) | ((dw[None] == lhs)
+                                & (idx[None, :] < idx[:, None]))
+    return beats.sum(-1)
+
+
+def lagrangian_topn_mask(w, c, lams, n, equality: bool):
+    """{0,1} vertices z(λ) for a λ batch: (G, K) rows of top-n selections.
+
+    With ``equality`` False the positivity filter s_i > 0 is evaluated as
+    w_i > λ·c_i — same crossing form, same determinism guarantee."""
+    mask = (lagrangian_ranks(w, c, lams)
+            < jnp.asarray(n)[..., None]).astype(jnp.float32)
+    if not equality:
+        mask = mask * (w[None, :] > lams[:, None] * c[None, :])
+    return mask
+
+
+def lagrangian_topn_cost(w, c, lams, n, equality: bool):
+    """cost(λ) = Σ c·z(λ) for a λ batch: (G,) float32 — the grid engine's
+    scalar probe on backends without the Pallas `topn_lp` kernel."""
+    return (lagrangian_topn_mask(w, c, lams, n, equality)
+            * c.astype(jnp.float32)).sum(-1)

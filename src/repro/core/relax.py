@@ -4,12 +4,39 @@ The shared polytope is  P = { zÌƒâˆˆ[0,1]^K : Î£zÌƒ (=|â‰¤) N,  Î£ cÌ²_k zÌƒ_k â
 
 `lp_topn` solves  max âŸ¨w, zÌƒâŸ© over P with a *parametric Lagrangian* method:
 for multiplier Î» the optimizer of the Lagrangian is the top-N arms by score
-wâˆ’Î»c; cost(Î») is non-increasing, so bisection finds the breakpoint Î»*, and
-mixing the two adjacent vertices hits the budget exactly. For this
-2-constraint box LP the optimum has â‰¤2 fractional coordinates, so the mixed
-point is the true LP optimum (validated against brute-force vertex
-enumeration in tests). This replaces the paper's Gurobi call with a jit-able
-O(K log K Â· iters) routine that vmaps across simulation seeds.
+wâˆ’Î»c; cost(Î») is non-increasing, so locating the breakpoint Î»* and mixing
+the two straddling vertices hits the budget exactly. For this 2-constraint
+box LP the optimum has â‰¤2 fractional coordinates, so the mixed point is the
+true LP optimum (validated against brute-force vertex enumeration in tests).
+This replaces the paper's Gurobi call with a jit-able routine that vmaps
+across tenants/seeds.
+
+Two engines locate Î»*:
+
+  grid   (default) â€” exact-ladder parametric search with two lowerings.
+         On accelerators (Pallas `topn_lp` kernel active): one batched
+         octave round over Î» = 2^0..2^24 (the whole doubling ladder as a
+         single (G, K) batch) followed by GRID_ROUNDS G-way mantissa rounds
+         â€” each probe is only the *scalar* vertex cost Î£cÂ·z(Î»), reduced by
+         the tiled Pallas kernel, so the search is a handful of wide fused
+         batches instead of ~72 dependent vertex evaluations. On CPU
+         (dispatch/throughput-bound; wide batches buy nothing): the same
+         ladder walked probe-count-optimally â€” integer-exponent bisection
+         then mantissa bisection against *precomputed pairwise crossing
+         thresholds* t[i,j] = (w_jâˆ’w_i)/(c_jâˆ’c_i), making each probe one
+         compare+xor per arm pair (~29 cheap rows vs the reference's 72).
+         Every probe Î» is exactly representable (2^e Â· dyadic m), so all
+         recomputation is bitwise reproducible under any XLA fusion.
+  bisect â€” the original sequential double-then-bisect chain (DOUBLE_ITERS +
+         BISECT_ITERS depth, full score-vertex evaluation per step),
+         retained as the reference implementation for equivalence tests
+         and benchmark baselines (the PR-2 solver).
+
+Both engines pair the straddling vertices with the costs that were actually
+probed for them when mixing (recomputing z from Î» through a
+differently-rounded score expression can flip a near-tie and return a
+vertex whose cost was never the one tested â€” see `core.ranks` on why
+w âˆ’ Î»Â·c is never ranked directly).
 
   SUC: lp_topn(Î¼Ì„)                    (Eq. 4, Î± = 1)
   AIC: lp_topn(ln Î¼Ì„)                 (Eq. 5 log-transform, Î± = 1)
@@ -19,11 +46,14 @@ O(K log K Â· iters) routine that vmaps across simulation seeds.
 Two entry points: `solve_relaxed` (static kind/n, the single-instance path)
 and `solve_batch` = vmap(`solve_relaxed_ix`) â€” traced per-tenant kind index,
 N, and Ï, dispatched via lax.switch, for the multi-tenant fleet driver.
+All solver entry points take ``engine=None`` which resolves to
+`DEFAULT_ENGINE` (env ``REPRO_LP_ENGINE``, default "grid"); the argument is
+trace-time static, so jitted callers must thread it as a static argument.
 """
 from __future__ import annotations
 
-import functools
 import itertools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -31,10 +61,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rewards as R
+from repro.core.ranks import (lagrangian_topn_cost, lagrangian_topn_mask,
+                              stable_desc_ranks, topn_mask)
+from repro.kernels import ops as kops
 
-BISECT_ITERS = 48
-DOUBLE_ITERS = 24
+__all__ = [
+    "lp_topn", "lp_topn_dyn", "solve_relaxed", "solve_relaxed_ix",
+    "solve_batch", "solve_direct", "enumerate_actions", "stable_desc_ranks",
+    "ENGINES", "DEFAULT_ENGINE",
+]
+
+BISECT_ITERS = 48     # bisect engine: sequential bisection depth
+DOUBLE_ITERS = 24     # bisect engine: Î»-doubling depth (cap Î» at 2^24)
 FW_STEPS = 16
+
+LAM_MAX_EXP = 24       # both engines cap Î» at 2^LAM_MAX_EXP
+GRID_ROUNDS = 4        # wide lowering: mantissa rounds (incl. the final one)
+GRID_POINTS = 64       # wide lowering: Î» probes per round (power of 2)
+GRID_EXP_ITERS = 5     # CPU lowering: integer-exponent bisection depth
+GRID_TAIL_ITERS = 18   # CPU lowering: mantissa bisection depth
+
+ENGINES = ("grid", "bisect")
+DEFAULT_ENGINE = os.environ.get("REPRO_LP_ENGINE", "grid")
+
+
+def _resolve_engine(engine: Optional[str]) -> str:
+    engine = DEFAULT_ENGINE if engine is None else engine
+    if engine not in ENGINES:
+        raise ValueError(f"unknown LP engine {engine!r}, want one of "
+                         f"{ENGINES}")
+    return engine
 
 
 def _topn_given_lambda(w, c, n: int, lam, equality: bool):
@@ -48,33 +104,227 @@ def _topn_given_lambda(w, c, n: int, lam, equality: bool):
     return z
 
 
-def stable_desc_ranks(score):
-    """Stable descending ranks by O(KÂ²) pairwise count â€” no sort.
-
-    rank_i = #{j : s_j > s_i} + #{j < i : s_j == s_i}; identical tie order to
-    stable argsort and lax.top_k (lower index wins). XLA CPU lowers sorts as
-    a per-row loop, so inside the vmapped fleet solver this elementwise form
-    is ~30Ã— faster at 64 tenants and scales with batch width."""
-    k = score.shape[-1]
-    idx = jnp.arange(k)
-    beats = (score[..., None, :] > score[..., :, None]) | (
-        (score[..., None, :] == score[..., :, None])
-        & (idx[None, :] < idx[:, None]))
-    return beats.sum(-1)
-
-
 def _topn_given_lambda_dyn(w, c, n, lam, equality: bool):
     """`_topn_given_lambda` with a *traced* cardinality n.
 
     Rank-threshold formulation so n can vary per tenant under vmap."""
-    score = w - lam * c
-    z = (stable_desc_ranks(score) < n).astype(jnp.float32)
+    return topn_mask(w - lam * c, n, equality)
+
+
+def _mix_straddle(rho, z_lo, c_lo, z_hi, c_hi):
+    """Mix the straddling vertices to meet the budget exactly.
+
+    z_lo is the infeasible-side vertex (cost > Ï when one exists), z_hi the
+    feasible-side one; c_lo/c_hi are the costs *as probed for those
+    vertices* (the consistency every engine path relies on). When even
+    z_hi violates Ï (unattainable budget, see `lp_topn`) Î¸ clips to 0 and
+    z_hi is returned as-is."""
+    theta = jnp.where(c_lo > c_hi, (rho - c_hi) / jnp.maximum(c_lo - c_hi,
+                                                              1e-12), 0.0)
+    theta = jnp.clip(theta, 0.0, 1.0)
+    return theta * z_lo + (1 - theta) * z_hi
+
+
+# ============================================================== grid engine
+def _lagrangian_costs(w, c, n, lams, equality: bool):
+    """cost(Î») = Î£ cÂ·z(Î») for a whole Î» batch: lams (G,) -> (G,) float32.
+
+    Only the scalar reduction is computed; no (G, K) vertex is ever
+    materialized during the search. On TPU the reduction is the tiled
+    Pallas `topn_lp` kernel over (G, K) score rows; elsewhere it is the
+    FMA-proof crossing form (`ranks.lagrangian_topn_cost`)."""
+    if kops.topn_lp_pallas():
+        scores = w[None, :] - lams[:, None] * c[None, :]
+        return kops.topn_lp(scores, jnp.broadcast_to(c, scores.shape),
+                            jnp.broadcast_to(jnp.asarray(n, jnp.int32),
+                                             lams.shape), equality=equality)
+    return lagrangian_topn_cost(w, c, lams, n, equality)
+
+
+def _grid_wide(w, c, n, rho, equality: bool):
+    """Accelerator lowering: G-way batched mantissa rounds.
+
+    The Î» ladder is kept *exactly representable* throughout: an octave
+    scale 2^e gathered from a constant ladder times a mantissa m carrying
+    log2(GRID_POINTS) bits per round. Every probe Î» = 2^eÂ·m is then an
+    exact product, so recomputing anything from Î» is bitwise reproducible
+    no matter how XLA fuses or duplicates the expression â€” the property
+    the engine's probe/materialize consistency rests on (see `core.ranks`
+    module docstring for the failure mode this avoids)."""
+    bits = GRID_POINTS.bit_length() - 1
+    assert GRID_POINTS == 1 << bits, "GRID_POINTS must be a power of two"
+
+    # octave round: the whole doubling ladder as one batch
+    geom = jnp.asarray(2.0 ** np.arange(LAM_MAX_EXP + 1), jnp.float32)
+    feas = _lagrangian_costs(w, c, n, geom, equality) <= rho
+    i = jnp.argmax(feas)                     # first feasible octave
+    any_f = feas.any()
+    # bracket = scaleÂ·[m_lo, m_hi]: below the first octave the "octave" is
+    # [0, 1] (m in [0, 1], scale 1); with no feasible octave at all the
+    # ladder walks up from the Î»-cap (Ï unattainable, see `lp_topn`).
+    scale = jnp.where(any_f & (i > 0), geom[jnp.maximum(i - 1, 0)],
+                      jnp.where(any_f, 1.0, geom[geom.shape[0] - 1]))
+    m_lo = jnp.where(any_f & (i == 0), 0.0, 1.0)
+    m_hi = jnp.where(any_f & (i == 0), 1.0, jnp.where(any_f, 2.0, 1.0))
+
+    # mantissa rounds: GRID_POINTS probes refine `bits` more bits each.
+    # ksÂ·step and scaleÂ·m are exact, m_lo + ksÂ·step rounds an exact sum â€”
+    # all uniquely-rounded ops. Straddle updates are positional (first
+    # feasible probe), so the bracket stays ordered even where boundary
+    # rounding makes the measured feasibility locally non-monotone.
+    # Î» probes are clamped to the cap so the degenerate no-feasible-octave
+    # bracket (m walking above 1 at scale 2^24) cannot discover Î»'s beyond
+    # the documented 2^LAM_MAX_EXP contract of `lp_topn`.
+    lam_cap = jnp.float32(2.0 ** LAM_MAX_EXP)
+    ks = jnp.arange(GRID_POINTS, dtype=jnp.float32)
+    for r in range(1, GRID_ROUNDS):
+        step = jnp.float32(2.0 ** (-bits * r))
+        ms = m_lo + ks * step
+        lams = jnp.minimum(scale * ms, lam_cap)
+        feas = _lagrangian_costs(w, c, n, lams, equality) <= rho
+        i = jnp.argmax(feas)
+        any_f = feas.any()
+        m_hi = jnp.where(any_f, ms[i], m_hi)
+        m_lo = jnp.where(any_f & (i > 0), ms[jnp.maximum(i - 1, 0)],
+                         jnp.where(any_f, m_lo, ms[GRID_POINTS - 1]))
+
+    # final round: Î»=0 and the feasible-side endpoint ride along with the
+    # finest ladder so every possible straddle lies inside ONE batch; the
+    # (G, K) vertex rows, their costs, the feasibility test, and the mixing
+    # weight Î¸ all derive from that batch. Selection is value-based (the
+    # cheapest feasible Î» and the costliest infeasible one), which needs no
+    # ordering assumption and pairs the true straddling vertices even if a
+    # boundary probe flipped during bracketing.
+    step = jnp.float32(2.0 ** (-bits * GRID_ROUNDS))
+    lams = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                            jnp.minimum(scale * (m_lo + ks * step), lam_cap),
+                            jnp.minimum(scale * m_hi, lam_cap)[None]])
+    masks = lagrangian_topn_mask(w, c, lams, n, equality)      # (G+2, K)
+    costs = (masks * c).sum(-1)
+    feas = costs <= rho
+    i_hi = jnp.where(feas.any(), jnp.argmin(jnp.where(feas, lams, jnp.inf)),
+                     jnp.argmax(lams))
+    i_lo = jnp.where((~feas).any(),
+                     jnp.argmax(jnp.where(feas, -jnp.inf, lams)), i_hi)
+    return _mix_straddle(rho, masks[i_lo], costs[i_lo],
+                         masks[i_hi], costs[i_hi])
+
+
+def _grid_tail(w, c, n, rho, equality: bool):
+    """CPU lowering: crossing-threshold bisection, probe-count optimal.
+
+    On a dispatch/throughput-bound host, wall time tracks the number of
+    probe rows evaluated, batched or not â€” so this lowering spends the
+    probe budget like a binary search: 2 init rows (Î»=0 and the Î»-cap),
+    GRID_EXP_ITERS integer-exponent rows locating Î»*'s octave (replacing
+    the reference's 24 sequential doublings), and GRID_TAIL_ITERS mantissa
+    rows â€” ~29 rows against the reference's 72, each cheaper too: all
+    pairwise crossings are precomputed once as thresholds
+    t[i,j] = (w_jâˆ’w_i)/(c_jâˆ’c_i), and a probe is then one compare+xor per
+    pair,
+
+        beats[i,j] = (Î» < t[i,j]) XOR (c_j < c_i),
+
+    with t[j,i] == t[i,j] bitwise (negation-exact division) and the xor
+    bit flipped â€” exactly one of each pair beats, so the induced ranks are
+    always a permutation, under any fusion (`core.ranks` docstring).
+    Probe Î»'s stay exactly representable (2^e, then 2^eÂ·m with dyadic m),
+    and vertices ride the loop carry with their costs like the bisect
+    reference, so the returned mix uses exactly the probed quantities."""
+    k = w.shape[-1]
+    idx = jnp.arange(k)
+    dw = w[None, :] - w[:, None]             # [i, j] = w_j âˆ’ w_i
+    dc = c[None, :] - c[:, None]
+    d = dc < 0                               # direction bit
+    # Î»-free pairs (c_i == c_j): order by dw, index breaks exact ties
+    tie = (dw > 0) | ((dw == 0) & (idx[None, :] < idx[:, None]))
+    t = jnp.where(dc == 0, jnp.where(tie, jnp.inf, -jnp.inf),
+                  dw / dc)                   # crossing Î» of each pair
     if not equality:
-        z = z * (score > 0)
-    return z
+        # positivity crossing (inclusive matroid): s_i > 0 <=> Î» < w_i/c_i
+        pd = c < 0
+        p = jnp.where(c == 0, jnp.where(w > 0, jnp.inf, -jnp.inf), w / c)
+
+    nn = jnp.asarray(n)
+
+    def probe(lam):                          # vertex + cost at Î» (or batch)
+        beats = (lam[..., None, None] < t) ^ d
+        mask = (beats.sum(-1) < nn[..., None]).astype(jnp.float32)
+        if not equality:
+            mask = mask * ((lam[..., None] < p) ^ pd)
+        return mask, (mask * c).sum(-1)
+
+    def exp2i(e):                            # exact 2^e for int32 e >= -126
+        return jax.lax.bitcast_convert_type(
+            (e + 127) << 23, jnp.float32)
+
+    # both anchors in one probe batch: Î»=0 and the Î»-cap. Carries stay in
+    # this packed [infeasible-side, feasible-side] pair layout so each
+    # bisection step updates them with one shared select: a feasible mid
+    # replaces slot 1, an infeasible one slot 0.
+    Z, C = probe(jnp.asarray([0.0, 2.0 ** LAM_MAX_EXP], jnp.float32))
+    z0, cost0 = Z[0], C[0]
+    slot = jnp.asarray([False, True])        # which slot a feasible Î» takes
+
+    # phase 1: integer bisection over the exponent e âˆˆ {0..LAM_MAX_EXP},
+    # with e_lo = -1 standing for Î»=0 and e_hi = LAM_MAX_EXP+1 for the cap.
+    def ebis(_, carry):
+        e, Z, C = carry
+        mid = (e[0] + e[1]) // 2
+        z_m, c_m = probe(exp2i(mid))
+        sel = (c_m <= rho) == slot
+        return (jnp.where(sel, mid, e), jnp.where(sel[:, None], z_m, Z),
+                jnp.where(sel, c_m, C))
+
+    e, Z, C = jax.lax.fori_loop(
+        0, GRID_EXP_ITERS, ebis,
+        (jnp.asarray([-1, LAM_MAX_EXP + 1], jnp.int32), Z, C))
+
+    # phase 2: mantissa bisection inside the octave. Î» = scaleÂ·m is an
+    # exact product (scale a power of two, m dyadic), probed in Î»-space
+    # against the same thresholds. e_lo = -1 means Î»* âˆˆ (0, 1]: scale 1,
+    # m âˆˆ [0, 1]. With Ï unattainable the carries never update and the
+    # Î»-cap vertex flows through (Î¸ clips to 0; see `lp_topn`).
+    e_lo = e[0]
+    scale = jnp.where(e_lo < 0, jnp.float32(1.0),
+                      exp2i(jnp.maximum(e_lo, 0)))
+    # e_lo == LAM_MAX_EXP means even the cap is infeasible: a degenerate
+    # [1, 1] bracket keeps every probe AT the cap rather than walking m
+    # above it (Î» beyond 2^LAM_MAX_EXP would break the `lp_topn` contract)
+    m0 = jnp.where(e_lo < 0, jnp.asarray([0.0, 1.0]),
+                   jnp.where(e_lo >= LAM_MAX_EXP, jnp.asarray([1.0, 1.0]),
+                             jnp.asarray([1.0, 2.0])))
+
+    def mbis(_, carry):
+        m, Z, C = carry
+        mid = 0.5 * (m[0] + m[1])
+        z_m, c_m = probe(scale * mid)
+        sel = (c_m <= rho) == slot
+        return (jnp.where(sel, mid, m), jnp.where(sel[:, None], z_m, Z),
+                jnp.where(sel, c_m, C))
+
+    _, Z, C = jax.lax.fori_loop(0, GRID_TAIL_ITERS, mbis, (m0, Z, C))
+    z_mix = _mix_straddle(rho, Z[0], C[0], Z[1], C[1])
+    return jnp.where(cost0 <= rho, z0, z_mix)
 
 
-def _lp_topn_impl(vertex, w, c, n, rho, equality: bool):
+def _lp_topn_grid(w, c, n, rho, equality: bool):
+    """Shared grid engine: static and traced n both route here (vertices
+    are rank-thresholded, so n may vary per tenant under vmap). Dispatches
+    to the wide G-way lowering when the Pallas `topn_lp` kernel is active
+    (TPU) and to the probe-optimal crossing-threshold lowering elsewhere;
+    both handle the feasible-at-Î»=0 early exit and the unattainable-Ï cap
+    internally."""
+    w = w.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    rho = jnp.float32(rho)
+    body = _grid_wide if kops.topn_lp_pallas() else _grid_tail
+    return body(w, c, n, rho, equality)
+
+
+# ============================================================ bisect engine
+def _lp_topn_bisect(vertex, w, c, n, rho, equality: bool):
+    """Reference engine: sequential Î»-doubling then bisection (PR-2 path)."""
     w = w.astype(jnp.float32)
     c = c.astype(jnp.float32)
     z0 = vertex(w, c, n, 0.0, equality)
@@ -88,9 +338,7 @@ def _lp_topn_impl(vertex, w, c, n, rho, equality: bool):
         return jnp.where(cost_at(lam) > rho, lam * 2.0, lam)
     lam_hi0 = jax.lax.fori_loop(0, DOUBLE_ITERS, dbl, jnp.float32(1.0))
 
-    # Bisection carrying the *vertices* on each side of the breakpoint â€”
-    # recomputing them from Î» at the end loses the feasible vertex once
-    # float32 makes lam_lo == lam_hi (ties then resolve arbitrarily).
+    # Bisection carrying the *vertices* on each side of the breakpoint.
     z_hi0 = vertex(w, c, n, lam_hi0, equality)
 
     def bis(_, carry):
@@ -106,36 +354,52 @@ def _lp_topn_impl(vertex, w, c, n, rho, equality: bool):
 
     _, _, z_lo, z_hi = jax.lax.fori_loop(
         0, BISECT_ITERS, bis, (jnp.float32(0.0), lam_hi0, z0, z_hi0))
-    c_lo = jnp.dot(c, z_lo)
-    c_hi = jnp.dot(c, z_hi)
-    theta = jnp.where(c_lo > c_hi, (rho - c_hi) / jnp.maximum(c_lo - c_hi,
-                                                              1e-12), 0.0)
-    theta = jnp.clip(theta, 0.0, 1.0)
-    z_mix = theta * z_lo + (1 - theta) * z_hi
+    z_mix = _mix_straddle(rho, z_lo, jnp.dot(c, z_lo), z_hi,
+                          jnp.dot(c, z_hi))
     return jnp.where(cost0 <= rho, z0, z_mix)
 
 
-def lp_topn(w, c, n: int, rho: float, equality: bool):
-    """max âŸ¨w,zâŸ© s.t. Î£z (=|â‰¤) n, âŸ¨c,zâŸ© â‰¤ rho, zâˆˆ[0,1]^K."""
-    return _lp_topn_impl(_topn_given_lambda, w, c, n, rho, equality)
+def _lp_topn_impl(vertex, w, c, n, rho, equality: bool,
+                  engine: Optional[str] = None):
+    if _resolve_engine(engine) == "grid":
+        return _lp_topn_grid(w, c, n, rho, equality)
+    return _lp_topn_bisect(vertex, w, c, n, rho, equality)
 
 
-def lp_topn_dyn(w, c, n, rho, equality: bool):
+def lp_topn(w, c, n: int, rho: float, equality: bool,
+            engine: Optional[str] = None):
+    """max âŸ¨w,zâŸ© s.t. Î£z (=|â‰¤) n, âŸ¨c,zâŸ© â‰¤ rho, zâˆˆ[0,1]^K.
+
+    Unattainable budgets degrade gracefully rather than erroring (the UCB
+    loop may produce them transiently): Î» is capped at 2^24, so when no
+    vertex on the Î»-ladder meets Ï â€” e.g. Ï below the cheapest n-subset
+    cost, or score scales so large that even Î»=2^24 cannot flip the ranking
+    to the cheap arms â€” both engines return the Î»-cap vertex (the
+    minimum-cost top-n selection reachable under the cap), which then
+    *violates* the budget. Callers needing hard feasibility must check
+    âŸ¨c, zâŸ© themselves.
+    """
+    return _lp_topn_impl(_topn_given_lambda, w, c, n, rho, equality, engine)
+
+
+def lp_topn_dyn(w, c, n, rho, equality: bool, engine: Optional[str] = None):
     """`lp_topn` with traced (n, rho) â€” the per-tenant fleet/vmap path."""
-    return _lp_topn_impl(_topn_given_lambda_dyn, w, c, n, rho, equality)
+    return _lp_topn_impl(_topn_given_lambda_dyn, w, c, n, rho, equality,
+                         engine)
 
 
-def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float):
+def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float,
+                  engine: Optional[str] = None):
     """Fractional zÌƒ solving the relaxed problem for the given reward model."""
     if kind == "suc":
-        return lp_topn(mu_bar, c_low, n, rho, equality=True)
+        return lp_topn(mu_bar, c_low, n, rho, equality=True, engine=engine)
     if kind == "aic":
         w = jnp.log(jnp.clip(mu_bar, R.EPS, 1.0))
-        return lp_topn(w, c_low, n, rho, equality=True)
+        return lp_topn(w, c_low, n, rho, equality=True, engine=engine)
     if kind == "awc":
         def fw(i, z):
             g = R.awc_multilinear_grad(z, mu_bar)
-            v = lp_topn(g, c_low, n, rho, equality=False)
+            v = lp_topn(g, c_low, n, rho, equality=False, engine=engine)
             return z + v / FW_STEPS
         return jax.lax.fori_loop(0, FW_STEPS, fw,
                                  jnp.zeros_like(mu_bar, jnp.float32))
@@ -143,7 +407,8 @@ def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float):
 
 
 def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
-                     kinds_present: Tuple[int, ...] = (0, 1, 2)):
+                     kinds_present: Tuple[int, ...] = (0, 1, 2),
+                     engine: Optional[str] = None):
     """`solve_relaxed` with a *traced* reward-model index (R.KIND_INDEX
     order: awc=0, suc=1, aic=2) and traced (n, rho) â€” lax.switch dispatch so
     a mixed-kind fleet solves every tenant inside one jitted program.
@@ -161,17 +426,18 @@ def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
     def awc():
         def fw(i, z):
             g = R.awc_multilinear_grad(z, mu_bar)
-            v = lp_topn_dyn(g, c_low, n, rho, equality=False)
+            v = lp_topn_dyn(g, c_low, n, rho, equality=False, engine=engine)
             return z + v / FW_STEPS
         return jax.lax.fori_loop(0, FW_STEPS, fw,
                                  jnp.zeros_like(mu_bar, jnp.float32))
 
     def suc():
-        return lp_topn_dyn(mu_bar, c_low, n, rho, equality=True)
+        return lp_topn_dyn(mu_bar, c_low, n, rho, equality=True,
+                           engine=engine)
 
     def aic():
         w = jnp.log(jnp.clip(mu_bar, R.EPS, 1.0))
-        return lp_topn_dyn(w, c_low, n, rho, equality=True)
+        return lp_topn_dyn(w, c_low, n, rho, equality=True, engine=engine)
 
     branches = (awc, suc, aic)
     present = tuple(sorted(set(kinds_present)))
@@ -185,7 +451,8 @@ def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
 
 
 def solve_batch(kind_ix, mu_bar, c_low, n, rho,
-                kinds_present: Tuple[int, ...] = (0, 1, 2)):
+                kinds_present: Tuple[int, ...] = (0, 1, 2),
+                engine: Optional[str] = None):
     """Batched relax solve: one row per tenant, per-tenant task kind.
 
     kind_ix (M,) int32, mu_bar/c_low (M, K), n (M,) int32, rho (M,) â€” vmap
@@ -193,7 +460,7 @@ def solve_batch(kind_ix, mu_bar, c_low, n, rho,
     branch once for the whole batch and selects per row."""
     return jax.vmap(
         lambda ki, mb, cl, nn, rr: solve_relaxed_ix(ki, mb, cl, nn, rr,
-                                                    kinds_present)
+                                                    kinds_present, engine)
     )(kind_ix, mu_bar, c_low, n, rho)
 
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.ranks import stable_desc_ranks
+
 EPS = 1e-5
 
 
@@ -41,8 +43,13 @@ def pairwise_round(z, key):
     def body(carry):
         z, key = carry
         f = frac_mask(z)
-        idx = jnp.argsort(~f)          # fractional entries first (stable)
-        i, j = idx[0], idx[1]
+        # two smallest fractional indices via masked min — same (i, j) the
+        # old stable argsort(~f) picked, without its per-row sort loop
+        # inside the vmapped while body on CPU
+        k = z.shape[0]
+        ar = jnp.arange(k)
+        i = jnp.min(jnp.where(f, ar, k))
+        j = jnp.min(jnp.where(f & (ar != i), ar, k))
         zi, zj = z[i], z[j]
         p = jnp.minimum(1.0 - zi, zj)
         q = jnp.minimum(zi, 1.0 - zj)
@@ -75,7 +82,6 @@ def pad_to_n_dyn(mask, scores, n, equality):
     """Pad |S| up to the base-matroid size n with the highest-score
     unselected arms; identity when `equality` is False (AWC's inclusive
     matroid). n and equality may be traced — the per-tenant fleet path."""
-    from repro.core.relax import stable_desc_ranks
     n = jnp.asarray(n, jnp.int32)
     deficit = n - mask.sum().astype(jnp.int32)
     fill = jnp.where(mask > 0, -jnp.inf, scores)

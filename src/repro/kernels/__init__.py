@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer — compute hot-spots with custom TPU kernels.
+
+Kernels (each with a pure-jnp oracle in `ref.py`, interpret-tested; public
+jit'd entry points with backend dispatch in `ops.py`):
+
+  flash_attention   — tiled causal/windowed attention (model side)
+  decode_attention  — single-token KV-cache attention (serving side)
+  ssd_scan          — Mamba2 SSD intra-chunk dual form (model side)
+  topn_lp           — top-n-by-score cost reduction over (B, K) rows with
+                      traced per-row n: the parametric-LP grid engine's
+                      scalar cost probe (bandit side; `core.relax`)
+
+On CPU the kernels run in interpret mode (tests/benchmarks only — the
+`topn_lp` op dispatches to the fused pure-jnp path there instead, see
+`ops.topn_lp_pallas`); on TPU set ``REPRO_PALLAS_INTERPRET=0`` for compiled
+kernels.
+"""

@@ -13,6 +13,8 @@ import jax
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topn_lp as _topn
+from repro.kernels import ref as _ref
 
 
 def _interpret() -> bool:
@@ -35,3 +37,24 @@ def decode_attention(q, k, v, pos, *, bk: int = _dec.DEFAULT_BK):
 
 def ssd_chunk(xd, acum, bm, cm):
     return _ssd.ssd_chunk(xd, acum, bm, cm, interpret=_interpret())
+
+
+def topn_lp_pallas() -> bool:
+    """Whether `topn_lp` routes to the Pallas kernel (and whether the relax
+    grid engine probes through it). The probes sit inside the fleet's
+    jitted scan, so unlike the model-side kernels interpret mode is never
+    acceptable there: default to the compiled kernel on TPU and the fused
+    pure-jnp path elsewhere. ``REPRO_TOPN_LP_PALLAS=1`` forces the kernel
+    (interpret off-TPU — for tests/benchmarks only)."""
+    env = os.environ.get("REPRO_TOPN_LP_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+def topn_lp(score, cost, n, *, equality: bool = True):
+    """Top-n-by-score cost reduction: score/cost (B, K), n int/(B,) -> (B,)."""
+    if topn_lp_pallas():
+        return _topn.topn_lp(score, cost, n, equality=equality,
+                             interpret=_interpret())
+    return _ref.topn_lp(score, cost, n, equality=equality)

@@ -55,6 +55,14 @@ def decode_attention(q, k, v, pos):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def topn_lp(score, cost, n, *, equality: bool = True):
+    """Top-n-by-score cost reduction — delegates to the shared stable-rank
+    core so the kernel, the grid engine's CPU path, and every other selection
+    in the repo break ties identically."""
+    from repro.core.ranks import topn_lp_cost
+    return topn_lp_cost(score, cost, n, equality)
+
+
 def ssd_chunk(xd, acum, bm, cm):
     """Intra-chunk SSD + chunk-state oracle.
 

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the parametric-LP grid engine's inner reduction.
+
+For a (B, K) batch of (score, cost) rows with a traced per-row cardinality n
+the kernel returns the *top-n-by-score cost reduction*
+
+    out_b = Σ_k cost_bk · [stable_rank(score_b)_k < n_b]        (B,)
+
+— the scalar cost(λ) probe evaluated for every λ-grid candidate of every
+tenant at once (`core.relax` grid engine). Ranks use the shared stable
+descending order of `core.ranks` (lower index wins ties, identical to
+`lax.top_k`), accumulated tile-by-tile over the arm axis: each grid cell
+holds one (BB, Kp) row block in VMEM and loops K-sized tiles of the
+comparison, so the (B, K, K) pairwise tensor the pure-jnp form broadcasts is
+never materialized. With ``equality=False`` (inclusive matroid, the AWC
+Frank-Wolfe oracle) entries with score <= 0 are dropped from the reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30          # score pad: below any real Lagrangian score
+DEFAULT_BB = 8       # rows per grid cell
+DEFAULT_KT = 128     # arm-axis tile (lane width)
+
+
+def _kernel(score_ref, cost_ref, n_ref, out_ref, *, kt: int, equality: bool):
+    s = score_ref[...]                                   # (bb, kp)
+    c = cost_ref[...]
+    n = n_ref[...]                                       # (bb, 1) int32
+    bb, kp = s.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bb, kp), 1)
+
+    def tile(jt, ranks):
+        sj = jax.lax.dynamic_slice(s, (0, jt * kt), (bb, kt))
+        cj = jt * kt + jax.lax.broadcasted_iota(jnp.int32, (bb, kt), 1)
+        beats = (sj[:, None, :] > s[:, :, None]) | (
+            (sj[:, None, :] == s[:, :, None])
+            & (cj[:, None, :] < col[:, :, None]))        # (bb, kp, kt)
+        return ranks + beats.sum(-1).astype(jnp.int32)
+
+    ranks = jax.lax.fori_loop(0, kp // kt, tile,
+                              jnp.zeros((bb, kp), jnp.int32))
+    # arithmetic mask, mirroring core.ranks.topn_lp_cost
+    mask = (ranks < n).astype(jnp.float32)
+    if not equality:
+        mask = mask * (s > 0)
+    out_ref[...] = jnp.sum(mask * c, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("equality", "bb", "kt",
+                                             "interpret"))
+def topn_lp(score, cost, n, *, equality: bool = True, bb: int = DEFAULT_BB,
+            kt: int = DEFAULT_KT, interpret: bool = True):
+    """score/cost (B, K); n int or (B,) int32 -> (B,) float32 cost sums."""
+    b, k = score.shape
+    n = jnp.broadcast_to(jnp.asarray(n, jnp.int32), (b,))
+    bp = -(-b // bb) * bb
+    kp = -(-k // kt) * kt
+    s = jnp.full((bp, kp), NEG, jnp.float32)
+    s = s.at[:b, :k].set(score.astype(jnp.float32))
+    c = jnp.zeros((bp, kp), jnp.float32).at[:b, :k].set(
+        cost.astype(jnp.float32))
+    nn = jnp.zeros((bp, 1), jnp.int32).at[:b, 0].set(n)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, kt=kt, equality=equality),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=interpret,
+    )(s, c, nn)
+    return out[:b, 0]

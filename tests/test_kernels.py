@@ -99,6 +99,54 @@ def test_ssd_chunk(b, nc, l, h, p, n):
     np.testing.assert_allclose(np.asarray(st), np.asarray(st2), atol=1e-4)
 
 
+# ================================================================ topn_lp
+@pytest.mark.parametrize("b,k", [
+    (4, 9),         # fleet-like: tiny K, padding in both dims
+    (8, 128),       # exact tile fit
+    (5, 130),       # K spills into a second tile
+    (33, 40),       # B not a multiple of the row block
+])
+@pytest.mark.parametrize("equality", [True, False])
+def test_topn_lp_kernel_matches_oracle(b, k, equality):
+    from repro.kernels import topn_lp as tl
+    k0 = jax.random.PRNGKey(b * 100 + k)
+    score = jax.random.normal(k0, (b, k), jnp.float32)
+    cost = jax.random.uniform(jax.random.fold_in(k0, 1), (b, k), jnp.float32)
+    n = jax.random.randint(jax.random.fold_in(k0, 2), (b,), 1, k + 1)
+    out = tl.topn_lp(score, cost, n, equality=equality, interpret=True)
+    want = ref.topn_lp(score, cost, n, equality=equality)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_topn_lp_kernel_tie_order():
+    """Duplicated scores: the kernel's stable tie handling (lower index
+    wins) must match the shared rank core exactly."""
+    from repro.kernels import topn_lp as tl
+    score = jnp.asarray([[0.5, 0.7, 0.5, 0.7, 0.1],
+                         [1.0, 1.0, 1.0, 1.0, 1.0]], jnp.float32)
+    cost = jnp.asarray([[1.0, 2.0, 4.0, 8.0, 16.0],
+                        [1.0, 2.0, 4.0, 8.0, 16.0]], jnp.float32)
+    n = jnp.asarray([3, 2], jnp.int32)
+    out = tl.topn_lp(score, cost, n, equality=True, interpret=True)
+    # row 0: scores rank (0.7@1, 0.7@3, 0.5@0, 0.5@2, ...) -> {1, 3, 0}
+    # row 1: all tied -> lowest indices {0, 1}
+    np.testing.assert_allclose(np.asarray(out), [11.0, 3.0], atol=1e-6)
+
+
+def test_topn_lp_ops_dispatch(monkeypatch):
+    """`ops.topn_lp` must agree between the forced-Pallas (interpret) and
+    pure-jnp dispatch paths."""
+    k0 = jax.random.PRNGKey(0)
+    score = jax.random.normal(k0, (6, 9), jnp.float32)
+    cost = jax.random.uniform(jax.random.fold_in(k0, 1), (6, 9), jnp.float32)
+    n = jnp.asarray([1, 2, 3, 4, 5, 9], jnp.int32)
+    monkeypatch.setenv("REPRO_TOPN_LP_PALLAS", "0")
+    plain = np.asarray(ops.topn_lp(score, cost, n, equality=True))
+    monkeypatch.setenv("REPRO_TOPN_LP_PALLAS", "1")
+    forced = np.asarray(ops.topn_lp(score, cost, n, equality=True))
+    np.testing.assert_allclose(plain, forced, atol=1e-6)
+
+
 # ===================================================== chunked full-seq SSM
 def test_ssd_chunked_matches_sequential_scan():
     """The chunked dual form equals the naive recurrent scan."""

@@ -65,6 +65,109 @@ def test_direct_enumeration_small():
     assert v == pytest.approx(0.6)
 
 
+# ============================================= grid engine vs bisect reference
+@given(instances)
+@settings(max_examples=40, deadline=None)
+def test_grid_engine_matches_bisect_reference(seed):
+    """The grid engine is decision-equivalent to the retained bisection
+    reference: LP objective within 1e-5, budget feasibility preserved, and
+    ≤2 fractional coordinates (the LP-optimum shape) for the base-matroid
+    kinds — on randomized instances across all three reward models."""
+    mu, c, n, rho = make_instance(seed)
+    mu_j = jnp.array(mu, jnp.float32)
+    c_j = jnp.array(c, jnp.float32)
+    for kind in ("suc", "aic", "awc"):
+        zg = np.array(relax.solve_relaxed(kind, mu_j, c_j, n, rho,
+                                          engine="grid"))
+        zb = np.array(relax.solve_relaxed(kind, mu_j, c_j, n, rho,
+                                          engine="bisect"))
+        vg = float(R.relaxed_reward(kind, jnp.array(zg), mu_j))
+        vb = float(R.relaxed_reward(kind, jnp.array(zb), mu_j))
+        assert vg >= vb - 1e-5, (kind, vg, vb)
+        assert float(c @ zg) <= rho * 1.002 + 1e-5, (kind, float(c @ zg))
+        assert np.all(zg >= -1e-6) and np.all(zg <= 1 + 1e-6)
+        if kind != "awc":
+            assert abs(zg.sum() - n) < 1e-3
+            assert int(((zg > 1e-5) & (zg < 1 - 1e-5)).sum()) <= 2
+
+
+@given(instances)
+@settings(max_examples=15, deadline=None)
+def test_grid_static_and_dyn_paths_agree(seed):
+    """`lp_topn` (static n) and `lp_topn_dyn` (traced n) route through the
+    same grid engine and must pick identical selections."""
+    mu, c, n, rho = make_instance(seed)
+    w = jnp.array(mu, jnp.float32)
+    cj = jnp.array(c, jnp.float32)
+    for equality in (True, False):
+        z_s = np.array(relax.lp_topn(w, cj, n, rho, equality, engine="grid"))
+        z_d = np.array(relax.lp_topn_dyn(w, cj, jnp.int32(n),
+                                         jnp.float32(rho), equality,
+                                         engine="grid"))
+        assert np.array_equal(z_s, z_d), (z_s, z_d)
+
+
+def test_grid_wide_lowering_matches_reference(monkeypatch):
+    """The accelerator (G-way + Pallas interpret) lowering of the grid
+    engine agrees with the bisect reference too."""
+    monkeypatch.setenv("REPRO_TOPN_LP_PALLAS", "1")
+    for seed in range(4):
+        mu, c, n, rho = make_instance(seed)
+        mu_j = jnp.array(mu, jnp.float32)
+        c_j = jnp.array(c, jnp.float32)
+        for kind in ("suc", "awc"):
+            zg = np.array(relax.solve_relaxed(kind, mu_j, c_j, n, rho,
+                                              engine="grid"))
+            zb = np.array(relax.solve_relaxed(kind, mu_j, c_j, n, rho,
+                                              engine="bisect"))
+            vg = float(R.relaxed_reward(kind, jnp.array(zg), mu_j))
+            vb = float(R.relaxed_reward(kind, jnp.array(zb), mu_j))
+            assert vg >= vb - 1e-5, (kind, seed, vg, vb)
+            assert float(c @ zg) <= rho * 1.002 + 1e-5
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        relax.lp_topn(jnp.ones(4), jnp.ones(4), 2, 1.0, True,
+                      engine="simplex")
+
+
+# ================================================== infeasible-budget edges
+def test_rho_below_cheapest_subset_returns_min_cost_vertex():
+    """ρ below the cheapest n-subset: both engines degrade to the λ-cap
+    vertex — the n cheapest arms — and the budget is (necessarily)
+    violated, as documented in `lp_topn`."""
+    rng = np.random.default_rng(5)
+    k, n = 7, 3
+    mu = jnp.asarray(rng.uniform(0.2, 0.9, k), jnp.float32)
+    c = rng.uniform(0.1, 0.6, k)
+    rho = float(np.sort(c)[:n].sum()) * 0.5          # unattainable
+    cheapest = np.zeros(k)
+    cheapest[np.argsort(c)[:n]] = 1.0
+    for engine in ("grid", "bisect"):
+        z = np.array(relax.lp_topn(mu, jnp.asarray(c, jnp.float32), n, rho,
+                                   True, engine=engine))
+        assert np.array_equal(z, cheapest), (engine, z)
+        assert float(c @ z) > rho                    # documented violation
+
+
+def test_lambda_cap_insufficient_returns_cap_vertex():
+    """Score scales so large that even λ = 2^24 cannot flip the ranking to
+    the cheap arms: both engines return the λ-cap vertex (here the top-n
+    by score), violating ρ — the documented degradation."""
+    k, n = 5, 2
+    w = jnp.asarray([9e8, 8e8, 7e8, 6e8, 5e8], jnp.float32)   # huge scores
+    c = np.array([0.5, 0.6, 0.4, 0.01, 0.02])
+    rho = 0.05            # only arms {3, 4} are affordable
+    by_w = np.zeros(k)
+    by_w[:n] = 1.0        # cap vertex: ranking still by w
+    for engine in ("grid", "bisect"):
+        z = np.array(relax.lp_topn(w, jnp.asarray(c, jnp.float32), n, rho,
+                                   True, engine=engine))
+        assert np.array_equal(z, by_w), (engine, z)
+        assert float(c @ z) > rho
+
+
 # ===================================================================== rounding
 @given(instances)
 @settings(max_examples=20, deadline=None)
@@ -146,6 +249,80 @@ def test_batched_rounding_matches_per_row():
         jnp.asarray(batched), z, jnp.int32(n), True))
     assert np.all(padded.sum(-1) >= n)
     assert np.all(padded >= batched)      # padding only adds arms
+
+
+def _pairwise_round_argsort_ref(z, key):
+    """The PR-2 `pairwise_round` body (stable argsort pair selection) —
+    regression oracle for the cheaper two-smallest-index selection."""
+    z = jnp.clip(z.astype(jnp.float32), 0.0, 1.0)
+
+    def frac_mask(z):
+        return (z > rounding.EPS) & (z < 1.0 - rounding.EPS)
+
+    def cond(carry):
+        z, _ = carry
+        return frac_mask(z).sum() >= 2
+
+    def body(carry):
+        z, key = carry
+        f = frac_mask(z)
+        idx = jnp.argsort(~f)          # fractional entries first (stable)
+        i, j = idx[0], idx[1]
+        zi, zj = z[i], z[j]
+        p = jnp.minimum(1.0 - zi, zj)
+        q = jnp.minimum(zi, 1.0 - zj)
+        key, k1 = jax.random.split(key)
+        u = jax.random.uniform(k1)
+        first = u < q / jnp.maximum(p + q, 1e-12)
+        zi_new = jnp.where(first, zi + p, zi - q)
+        zj_new = jnp.where(first, zj - p, zj + q)
+        z = z.at[i].set(zi_new).at[j].set(zj_new)
+        return z, key
+
+    z, key = jax.lax.while_loop(cond, body, (z, key))
+    f = frac_mask(z)
+    key, k1 = jax.random.split(key)
+    u = jax.random.uniform(k1)
+    return jnp.where(f, (u < z).astype(jnp.float32), jnp.round(z))
+
+
+@given(instances)
+@settings(max_examples=20, deadline=None)
+def test_pairwise_round_two_smallest_bit_identical_to_argsort(seed):
+    """The argmin-based pair selection keeps the RNG stream and the result
+    bit-identical to the original stable-argsort implementation."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(3, 12))
+    z = jnp.asarray(rng.uniform(0, 1, k), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    new = np.asarray(rounding.pairwise_round(z, key))
+    old = np.asarray(_pairwise_round_argsort_ref(z, key))
+    assert np.array_equal(new, old), (new, old)
+
+
+def test_shared_ranks_util_consistency():
+    """`core.ranks` is the single selection core: stable ranks match a
+    stable argsort, and the crossing-form λ-batch mask matches ranking the
+    subtracted scores directly (tie-free instances)."""
+    from repro.core import ranks
+    rng = np.random.default_rng(9)
+    s = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+    want = np.argsort(np.argsort(-np.asarray(s), axis=-1, kind="stable"),
+                      axis=-1, kind="stable")
+    assert np.array_equal(np.asarray(ranks.stable_desc_ranks(s)), want)
+
+    w = jnp.asarray(rng.uniform(0.1, 1.0, 8), jnp.float32)
+    c = jnp.asarray(rng.uniform(0.05, 0.6, 8), jnp.float32)
+    lams = jnp.asarray([0.0, 0.3, 1.7, 10.0], jnp.float32)
+    for equality in (True, False):
+        got = np.asarray(ranks.lagrangian_topn_mask(w, c, lams, 3, equality))
+        want = np.stack([
+            np.asarray(ranks.topn_mask(w - lam * c, 3, equality))
+            for lam in np.asarray(lams)])
+        assert np.array_equal(got, want)
+        cost = np.asarray(ranks.lagrangian_topn_cost(w, c, lams, 3,
+                                                     equality))
+        assert np.allclose(cost, (want * np.asarray(c)).sum(-1), atol=1e-6)
 
 
 def test_rounding_expected_reward_dominates_relaxed():
