@@ -18,10 +18,21 @@ so future PRs have a perf trajectory; the recorded sweep is committed.
 
 Acceptance (ISSUE 3): ≥2× batched[grid] vs batched[bisect] at 64 tenants
 on CPU, with the AWC/mixed fleets showing the largest gain.
+Acceptance (ISSUE 4): ≥3× batched[grid] AWC/mixed rounds/sec at 64 tenants
+over the PR-3 committed BENCH_fleet.json (warm Frank-Wolfe + fixed-trip
+rounding + sort-free cascade).
+
+`--awc-sweep` adds an AWC-only (N, K) sweep row set (matroid size × pool
+slice) to the emitted trajectory. `--baseline PATH` diffs every matching
+(workload, tenants, n, k) grid-engine cell against a previously committed
+BENCH_fleet.json and exits non-zero when any cell regresses by more than
+`--max-regression` (default 20%) — wired into CI as a soft gate (warn,
+don't fail: the 2-core shared runner swings more than real regressions).
 
   PYTHONPATH=src python benchmarks/fleet_throughput.py \
       [--tenants 1 4 16 64] [--rounds 256] [--kind suc] [--mixed] \
-      [--workloads suc awc mixed] [--reps 3] [--smoke] [--json PATH]
+      [--workloads suc awc mixed] [--reps 3] [--awc-sweep] [--smoke] \
+      [--baseline BENCH_fleet.json] [--max-regression 0.2] [--json PATH]
 """
 import os
 
@@ -46,14 +57,22 @@ def make_kinds(workload, m):
     return [workload] * m
 
 
-def make_fleet_cfg(pool, kinds, T):
+def make_fleet_cfg(pool, kinds, T, n=4):
     from repro.core.policies import PolicyConfig
     from repro.env.llm_profiles import default_rho
     from repro.router import fleet
-    pcfgs = [PolicyConfig(kind=k, k=pool.k, n=4,
-                          rho=default_rho(pool, k, 4), delta=1.0 / T)
+    pcfgs = [PolicyConfig(kind=k, k=pool.k, n=n,
+                          rho=default_rho(pool, k, n), delta=1.0 / T)
              for k in kinds]
     return fleet.fleet_config(pcfgs)
+
+
+def slice_pool(pool, k):
+    """The first k arms of the pool as a smaller bandit environment — the
+    K axis of the AWC sweep."""
+    import dataclasses
+    return dataclasses.replace(pool, names=pool.names[:k], mu=pool.mu[:k],
+                               mean_cost=pool.mean_cost[:k])
 
 
 def run_single_tenant_loop(pool, cfg, T, key, step_fn):
@@ -69,19 +88,8 @@ def run_single_tenant_loop(pool, cfg, T, key, step_fn):
 def bench_engines(pool, kinds, T, reps):
     """Best-of-reps batched rounds/sec for both solver engines, interleaved
     so machine noise hits both paths alike."""
-    from repro.router import fleet
-    m = len(kinds)
-    keys = jax.random.split(jax.random.PRNGKey(0), m)
-    cfg = make_fleet_cfg(pool, kinds, T)
-    best = {"grid": 0.0, "bisect": 0.0}
-    for eng in best:       # compile both before timing anything
-        fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
-    for _ in range(reps):
-        for eng in best:
-            t0 = time.perf_counter()
-            fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
-            best[eng] = max(best[eng], m * T / (time.perf_counter() - t0))
-    return best
+    return bench_engines_cfg(pool, make_fleet_cfg(pool, kinds, T),
+                             len(kinds), T, reps)
 
 
 def bench_host_loops(pool, kinds, T):
@@ -120,6 +128,78 @@ def bench_host_loops(pool, kinds, T):
     return m * T / dt_seq, m * T / dt_solo
 
 
+def bench_awc_sweep(pool, T, reps, tenants):
+    """AWC-only (N, K) sweep: matroid size and pool-slice width — the axes
+    the warm Frank-Wolfe path is most sensitive to (FW step count scales
+    the LP-oracle chain; K scales every probe row and the rounding trip
+    count). Returns trajectory rows tagged with n and k."""
+    rows = []
+    for k in (5, pool.k):
+        sub = slice_pool(pool, k)
+        for n in (2, 4, 6):
+            if n >= k:
+                continue
+            kinds = ["awc"] * tenants
+            cfg = make_fleet_cfg(sub, kinds, T, n=n)
+            rates = bench_engines_cfg(sub, cfg, tenants, T, reps)
+            rows.append({"tenants": tenants, "workload": "awc",
+                         "n": n, "k": k,
+                         "engine_rps": {kk: round(v, 1)
+                                        for kk, v in rates.items()},
+                         "speedup": round(rates["grid"] / rates["bisect"],
+                                          3)})
+            print(f"{tenants},{T},awc[n={n},k={k}],"
+                  f"{rates['grid']:.1f},{rates['bisect']:.1f},"
+                  f"{rows[-1]['speedup']:.2f}")
+    return rows
+
+
+def bench_engines_cfg(pool, cfg, m, T, reps):
+    """The shared warmup + interleaved best-of-reps engine timing loop."""
+    from repro.router import fleet
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    best = {"grid": 0.0, "bisect": 0.0}
+    for eng in best:
+        fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
+    for _ in range(reps):
+        for eng in best:
+            t0 = time.perf_counter()
+            fleet.simulate_fleet(pool, cfg, T=T, keys=keys, engine=eng)
+            best[eng] = max(best[eng], m * T / (time.perf_counter() - t0))
+    return best
+
+
+def diff_baseline(results, base, max_regression):
+    """Soft regression gate: compare grid-engine rounds/sec against a
+    committed BENCH_fleet.json cell-by-cell. Returns the number of cells
+    regressing by more than ``max_regression`` (fraction)."""
+    def cell_key(row):
+        return (row["workload"], row["tenants"], row.get("n"), row.get("k"))
+
+    base_cells = {cell_key(r): r["engine_rps"]["grid"]
+                  for r in base.get("results", [])}
+    bad = matched = 0
+    print(f"# baseline diff vs commit {base.get('commit', '?')} "
+          f"(gate {max_regression:.0%})")
+    for row in results:
+        old = base_cells.get(cell_key(row))
+        if old is None or old <= 0:
+            continue
+        matched += 1
+        new = row["engine_rps"]["grid"]
+        ratio = new / old
+        flag = ""
+        if ratio < 1.0 - max_regression:
+            bad += 1
+            flag = "  <-- REGRESSION"
+        print(f"  {row['workload']},{row['tenants']}"
+              f"{',' + str(row['n']) + ',' + str(row['k']) if 'n' in row else ''}"
+              f": {old:.0f} -> {new:.0f} rps ({ratio:.2f}x){flag}")
+    if matched == 0:
+        print("  (no matching cells — baseline sweep differs)")
+    return bad
+
+
 def git_commit():
     here = os.path.dirname(os.path.abspath(__file__))
     try:
@@ -148,6 +228,13 @@ def main(argv=None):
                     help="interleaved timing repetitions (best kept)")
     ap.add_argument("--host-loops", action="store_true",
                     help="also time the per-call and unbatched host loops")
+    ap.add_argument("--awc-sweep", action="store_true",
+                    help="add the AWC-only (N, K) sweep row set")
+    ap.add_argument("--baseline", default=None,
+                    help="diff grid rounds/sec against a committed "
+                         "BENCH_fleet.json; exit non-zero on regression")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="baseline-gate threshold (fraction, default 0.2)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration (~1 min)")
     ap.add_argument("--json", default=None,
@@ -156,7 +243,10 @@ def main(argv=None):
 
     from repro.env.llm_profiles import paper_pool
     if args.smoke:
-        args.tenants, args.rounds, args.reps = [1, 8], 64, 1
+        # keep --rounds at the committed sweep's 256: shorter runs
+        # under-measure rounds/sec (fixed dispatch overhead amortizes over
+        # the scan) and would trip the --baseline gate spuriously
+        args.tenants, args.rounds, args.reps = [1, 16], 256, 2
     if args.workloads:
         workloads = args.workloads
     elif args.kind and not args.mixed:
@@ -165,6 +255,10 @@ def main(argv=None):
         workloads = ["mixed"]
 
     pool = paper_pool("sciq")
+    baseline = None
+    if args.baseline:           # read BEFORE writing: the baseline may be
+        with open(args.baseline) as fh:          # the output path itself
+            baseline = json.load(fh)
     out = {"commit": git_commit(), "rounds": args.rounds,
            "backend": jax.default_backend(), "reps": args.reps,
            "results": []}
@@ -184,11 +278,25 @@ def main(argv=None):
             print(f"{m},{args.rounds},{workload},{rates['grid']:.1f},"
                   f"{rates['bisect']:.1f},{row['speedup']:.2f}")
 
+    if args.awc_sweep:
+        sweep_m = 16 if args.smoke else max(args.tenants)
+        out["results"].extend(
+            bench_awc_sweep(pool, args.rounds, args.reps, sweep_m))
+
     path = args.json or os.path.join(os.path.dirname(
         os.path.abspath(__file__)), "..", "BENCH_fleet.json")
     with open(path, "w") as fh:
         json.dump(out, fh, indent=1)
     print(f"# wrote {os.path.abspath(path)}")
+
+    if baseline is not None:
+        bad = diff_baseline(out["results"], baseline, args.max_regression)
+        if bad:
+            print(f"# {bad} cell(s) regressed beyond the "
+                  f"{args.max_regression:.0%} gate")
+            # distinct exit code so CI can soft-fail the perf gate while
+            # still hard-failing on real crashes in this script
+            raise SystemExit(3)
 
 
 if __name__ == "__main__":

@@ -26,24 +26,33 @@ def init_stats_batch(m: int, k: int) -> Dict[str, jnp.ndarray]:
     return {"mu_hat": z, "c_hat": z, "t_mu": z, "t_c": z}
 
 
-def radius(t, t_k, k: int, delta: float):
-    """ρ_{t,·} = sqrt( ln(2π²K t³ / 3δ) / (2 T) );  +inf when T == 0."""
+def radius(t, t_k, k: int, delta):
+    """ρ_{t,·} = sqrt( ln(2π²K t³ / 3δ) / (2 T) );  +inf when T == 0.
+
+    ``delta`` (like the α's below) is coerced to float32 up front so a
+    python-float caller (the legacy per-policy path) and a traced-array
+    caller (the fleet config rows) fold the same arithmetic to the same
+    bits — a 1-ulp radius difference is enough to flip a near-tie
+    selection between the two programs."""
+    delta = jnp.asarray(delta, jnp.float32)
     t = jnp.maximum(t.astype(jnp.float32), 1.0)
     num = jnp.log(2 * math.pi ** 2 * k * t ** 3 / (3 * delta))
     return jnp.where(t_k > 0, jnp.sqrt(num / (2 * jnp.maximum(t_k, 1.0))),
                      jnp.inf)
 
 
-def reward_ucb(stats, t, delta: float, alpha_mu: float):
+def reward_ucb(stats, t, delta, alpha_mu):
     k = stats["mu_hat"].shape[-1]     # arm count in both (K,) and (M, K)
     r = radius(t, stats["t_mu"], k, delta)
-    return jnp.minimum(stats["mu_hat"] + alpha_mu * r, 1.0)
+    return jnp.minimum(stats["mu_hat"]
+                       + jnp.asarray(alpha_mu, jnp.float32) * r, 1.0)
 
 
-def cost_lcb(stats, t, delta: float, alpha_c: float):
+def cost_lcb(stats, t, delta, alpha_c):
     k = stats["c_hat"].shape[-1]
     r = radius(t, stats["t_c"], k, delta)
-    return jnp.maximum(stats["c_hat"] - alpha_c * r, 0.0)
+    return jnp.maximum(stats["c_hat"]
+                       - jnp.asarray(alpha_c, jnp.float32) * r, 0.0)
 
 
 def update_stats(stats, feedback_mask, rewards, costs):

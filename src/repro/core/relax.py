@@ -43,6 +43,22 @@ w − λ·c is never ranked directly).
   AWC: continuous greedy — Frank-Wolfe on the multilinear extension with
        lp_topn as the linear-maximization oracle (Eq. 3, α = 1 − 1/e).
 
+AWC fast path (the fleet's hardest reward model): consecutive FW gradients
+barely move the Lagrangian breakpoint λ*, so on the grid engine the λ
+bracket found for step t seeds step t+1 — a 2-row revalidation probe
+({λ_lo, λ_hi}) plus two escape rows plus FW_WARM_ITERS bisection rows
+replaces the full ~25-probe-row cold search (`_grid_tail_warm`; the
+escape schedule guarantees whole-ladder recovery within the fixed trip
+budget, so the warm program is vmap/switch-friendly: no data-dependent
+trip counts).
+`fw_steps` (default `FW_STEPS`, env ``REPRO_FW_STEPS``) and `fw_warm`
+(env ``REPRO_FW_WARM``) are trace-time static knobs threaded through every
+solver entry point; warm-started and cold-started FW are decision-
+equivalent (property-tested: equal objective, overwhelmingly bit-equal
+z̃). On accelerators the per-step gradient + octave-ladder probe fuse into
+the Pallas `awc_fw` kernel (`kernels/awc_fw.py`) so gradient rows are
+never materialized between host-level ops.
+
 Two entry points: `solve_relaxed` (static kind/n, the single-instance path)
 and `solve_batch` = vmap(`solve_relaxed_ix`) — traced per-tenant kind index,
 N, and ρ, dispatched via lax.switch, for the multi-tenant fleet driver.
@@ -73,7 +89,24 @@ __all__ = [
 
 BISECT_ITERS = 48     # bisect engine: sequential bisection depth
 DOUBLE_ITERS = 24     # bisect engine: λ-doubling depth (cap λ at 2^24)
-FW_STEPS = 16
+# Continuous-greedy step count. The warm-started search makes each step
+# ~8 probe rows instead of ~25, so the AWC round is dominated by step
+# count again — the default drops to 8, which stays within 5e-3 of the
+# original 16 on the paper-pool corpus (property-tested sweep; 12 stays
+# within 1e-3) while halving the LP-oracle chain, the dominant term of an
+# AWC fleet round. ``REPRO_FW_STEPS=16`` restores the PR-2/3 setting;
+# callers may also thread ``fw_steps``. The (1−1/e) offline guarantee
+# holds at every tested count (fixed-step continuous greedy attains
+# 1−(1−1/T)^T ≥ 1−1/e for any T, and the α-guarantee test runs at the
+# default).
+FW_STEPS = int(os.environ.get("REPRO_FW_STEPS", "8"))
+FW_WARM = os.environ.get("REPRO_FW_WARM", "1") not in ("0", "false", "False")
+FW_WARM_ITERS = 3      # warm FW: bisection probe rows per step (on top of
+#                        the 2-row revalidation and 2 escape rows; escapes
+#                        double as bisections when the carried bracket is
+#                        still valid, and refinement compounds across FW
+#                        steps — near-bit-equal to cold FW on the test
+#                        corpus, objective gap ≤ 2e-6)
 
 LAM_MAX_EXP = 24       # both engines cap λ at 2^LAM_MAX_EXP
 GRID_ROUNDS = 4        # wide lowering: mantissa rounds (incl. the final one)
@@ -91,6 +124,11 @@ def _resolve_engine(engine: Optional[str]) -> str:
         raise ValueError(f"unknown LP engine {engine!r}, want one of "
                          f"{ENGINES}")
     return engine
+
+
+def _resolve_fw(fw_steps: Optional[int], fw_warm: Optional[bool]):
+    return (FW_STEPS if fw_steps is None else int(fw_steps),
+            FW_WARM if fw_warm is None else bool(fw_warm))
 
 
 def _topn_given_lambda(w, c, n: int, lam, equality: bool):
@@ -141,6 +179,12 @@ def _lagrangian_costs(w, c, n, lams, equality: bool):
     return lagrangian_topn_cost(w, c, lams, n, equality)
 
 
+def _octave_ladder():
+    """The exact power-of-two λ ladder 2^0..2^LAM_MAX_EXP shared by the
+    wide lowering's octave round and the fused `awc_fw` kernel probe."""
+    return jnp.asarray(2.0 ** np.arange(LAM_MAX_EXP + 1), jnp.float32)
+
+
 def _grid_wide(w, c, n, rho, equality: bool):
     """Accelerator lowering: G-way batched mantissa rounds.
 
@@ -151,12 +195,21 @@ def _grid_wide(w, c, n, rho, equality: bool):
     no matter how XLA fuses or duplicates the expression — the property
     the engine's probe/materialize consistency rests on (see `core.ranks`
     module docstring for the failure mode this avoids)."""
+    # octave round: the whole doubling ladder as one batch
+    feas = _lagrangian_costs(w, c, n, _octave_ladder(), equality) <= rho
+    return _grid_wide_from_octave(w, c, n, rho, equality, feas)
+
+
+def _grid_wide_from_octave(w, c, n, rho, equality: bool, feas):
+    """Mantissa rounds of the wide lowering given the octave round's
+    feasibility row (`feas` = cost(2^e) <= ρ over the whole ladder) — split
+    out so the fused AWC kernel (`kernels/awc_fw.py`), which emits the
+    octave costs together with the multilinear gradient, can feed the same
+    refinement."""
     bits = GRID_POINTS.bit_length() - 1
     assert GRID_POINTS == 1 << bits, "GRID_POINTS must be a power of two"
 
-    # octave round: the whole doubling ladder as one batch
-    geom = jnp.asarray(2.0 ** np.arange(LAM_MAX_EXP + 1), jnp.float32)
-    feas = _lagrangian_costs(w, c, n, geom, equality) <= rho
+    geom = _octave_ladder()
     i = jnp.argmax(feas)                     # first feasible octave
     any_f = feas.any()
     # bracket = scale·[m_lo, m_hi]: below the first octave the "octave" is
@@ -210,6 +263,75 @@ def _grid_wide(w, c, n, rho, equality: bool):
                          masks[i_hi], costs[i_hi])
 
 
+def _probe_factory(c, n, equality):
+    """Two-stage crossing-threshold probe builder: everything derivable
+    from the cost side alone is computed once per *solve* (the AWC
+    Frank-Wolfe loop re-makes the probe for a fresh gradient every step,
+    but c never changes), and `make(w)` adds the score-dependent pieces.
+
+    ``equality`` is a python bool on the single-kind paths — the
+    inclusive-matroid positivity filter is then compiled in or out — or a
+    traced per-row bool on the mixed-fleet unified path, where the filter
+    is applied behind a select so one probe chain serves every reward
+    model in the batch.
+
+    All pairwise crossings are precomputed as thresholds
+    t[i,j] = (w_j−w_i)/(c_j−c_i), and a probe is then one compare+xor per
+    pair,
+
+        beats[i,j] = (λ < t[i,j]) XOR (c_j < c_i),
+
+    with t[j,i] == t[i,j] bitwise (negation-exact division) and the xor
+    bit flipped — exactly one of each pair beats, so the induced ranks are
+    always a permutation, under any fusion (`core.ranks` docstring)."""
+    k = c.shape[-1]
+    idx = jnp.arange(k)
+    lower = idx[None, :] < idx[:, None]
+    dc = c[None, :] - c[:, None]
+    dc0 = dc == 0
+    d = dc < 0                               # direction bit
+    eq_static = isinstance(equality, bool)
+    need_pos = (not equality) if eq_static else True
+    if need_pos:
+        pd = c < 0
+        c0 = c == 0
+    nn = jnp.asarray(n)
+
+    def make(w):
+        dw = w[None, :] - w[:, None]         # [i, j] = w_j − w_i
+        # λ-free pairs (c_i == c_j): order by dw, index breaks exact ties
+        tie = (dw > 0) | ((dw == 0) & lower)
+        t = jnp.where(dc0, jnp.where(tie, jnp.inf, -jnp.inf),
+                      dw / dc)               # crossing λ of each pair
+        if need_pos:
+            # positivity crossing (inclusive): s_i > 0 <=> λ < w_i/c_i
+            p = jnp.where(c0, jnp.where(w > 0, jnp.inf, -jnp.inf), w / c)
+
+        def probe(lam):                      # vertex + cost at λ (or batch)
+            beats = (lam[..., None, None] < t) ^ d
+            mask = (beats.sum(-1) < nn[..., None]).astype(jnp.float32)
+            if need_pos:
+                pos = ((lam[..., None] < p) ^ pd).astype(jnp.float32)
+                if eq_static:
+                    mask = mask * pos
+                else:
+                    mask = mask * jnp.where(equality, 1.0, pos)
+            return mask, (mask * c).sum(-1)
+
+        return probe
+
+    return make
+
+
+def _make_probe(w, c, n, equality):
+    """One-shot probe closure (the cold search path)."""
+    return _probe_factory(c, n, equality)(w)
+
+
+def _exp2i(e):                               # exact 2^e for int32 e >= -126
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
 def _grid_tail(w, c, n, rho, equality: bool):
     """CPU lowering: crossing-threshold bisection, probe-count optimal.
 
@@ -218,45 +340,20 @@ def _grid_tail(w, c, n, rho, equality: bool):
     probe budget like a binary search: 2 init rows (λ=0 and the λ-cap),
     GRID_EXP_ITERS integer-exponent rows locating λ*'s octave (replacing
     the reference's 24 sequential doublings), and GRID_TAIL_ITERS mantissa
-    rows — ~29 rows against the reference's 72, each cheaper too: all
-    pairwise crossings are precomputed once as thresholds
-    t[i,j] = (w_j−w_i)/(c_j−c_i), and a probe is then one compare+xor per
-    pair,
-
-        beats[i,j] = (λ < t[i,j]) XOR (c_j < c_i),
-
-    with t[j,i] == t[i,j] bitwise (negation-exact division) and the xor
-    bit flipped — exactly one of each pair beats, so the induced ranks are
-    always a permutation, under any fusion (`core.ranks` docstring).
+    rows — ~29 rows against the reference's 72, each made cheap by the
+    precomputed crossing thresholds of `_make_probe`.
     Probe λ's stay exactly representable (2^e, then 2^e·m with dyadic m),
     and vertices ride the loop carry with their costs like the bisect
     reference, so the returned mix uses exactly the probed quantities."""
-    k = w.shape[-1]
-    idx = jnp.arange(k)
-    dw = w[None, :] - w[:, None]             # [i, j] = w_j − w_i
-    dc = c[None, :] - c[:, None]
-    d = dc < 0                               # direction bit
-    # λ-free pairs (c_i == c_j): order by dw, index breaks exact ties
-    tie = (dw > 0) | ((dw == 0) & (idx[None, :] < idx[:, None]))
-    t = jnp.where(dc == 0, jnp.where(tie, jnp.inf, -jnp.inf),
-                  dw / dc)                   # crossing λ of each pair
-    if not equality:
-        # positivity crossing (inclusive matroid): s_i > 0 <=> λ < w_i/c_i
-        pd = c < 0
-        p = jnp.where(c == 0, jnp.where(w > 0, jnp.inf, -jnp.inf), w / c)
+    z, _, _ = _grid_tail_bracket(w, c, n, rho, equality)
+    return z
 
-    nn = jnp.asarray(n)
 
-    def probe(lam):                          # vertex + cost at λ (or batch)
-        beats = (lam[..., None, None] < t) ^ d
-        mask = (beats.sum(-1) < nn[..., None]).astype(jnp.float32)
-        if not equality:
-            mask = mask * ((lam[..., None] < p) ^ pd)
-        return mask, (mask * c).sum(-1)
-
-    def exp2i(e):                            # exact 2^e for int32 e >= -126
-        return jax.lax.bitcast_convert_type(
-            (e + 127) << 23, jnp.float32)
+def _grid_tail_bracket(w, c, n, rho, equality: bool):
+    """`_grid_tail` that also returns the final (λ_lo, λ_hi) bracket — the
+    warm-start seed the AWC Frank-Wolfe loop carries across iterations."""
+    probe = _make_probe(w, c, n, equality)
+    exp2i = _exp2i
 
     # both anchors in one probe batch: λ=0 and the λ-cap. Carries stay in
     # this packed [infeasible-side, feasible-side] pair layout so each
@@ -303,9 +400,101 @@ def _grid_tail(w, c, n, rho, equality: bool):
         return (jnp.where(sel, mid, m), jnp.where(sel[:, None], z_m, Z),
                 jnp.where(sel, c_m, C))
 
-    _, Z, C = jax.lax.fori_loop(0, GRID_TAIL_ITERS, mbis, (m0, Z, C))
+    m, Z, C = jax.lax.fori_loop(0, GRID_TAIL_ITERS, mbis, (m0, Z, C))
     z_mix = _mix_straddle(rho, Z[0], C[0], Z[1], C[1])
-    return jnp.where(cost0 <= rho, z0, z_mix)
+    return (jnp.where(cost0 <= rho, z0, z_mix), scale * m[0], scale * m[1])
+
+
+def _grid_tail_warm(probe, rho, lam_lo, lam_hi, Zi, Ci):
+    """Warm-started `_grid_tail`: revalidate + refine a carried λ bracket.
+
+    The caller supplies the probe closure and the 2-row revalidation probe
+    at {λ_lo, λ_hi} (`Zi`/`Ci`). Classification, then two escape probes,
+    then pure bisection — every trip count fixed (vmap/switch friendly):
+
+      refine    — the carried bracket still straddles the breakpoint:
+                  all remaining probes are plain packed-slot bisections
+                  (the cold search's phase-2 machinery).
+      down      — both carried ends went feasible (λ* fell below λ_lo):
+                  escape probe A re-anchors at λ=0, which doubles as the
+                  cold search's feasible-at-0 early-exit probe — cost(0)
+                  bounds every cost(λ), so the early exit is *provably
+                  unreachable* in refine/up lanes and the λ=0 row is paid
+                  only where it can matter. Bisection of [0, λ_lo]
+                  refines.
+      up        — both ends infeasible (λ* rose above λ_hi): escape probe
+                  A tries λ_hi·4; if still infeasible, escape probe B
+                  jumps straight to the λ-cap — either feasible (valid,
+                  if coarse, bracket [λ_hi·4, cap] that bisection then
+                  tightens) or infeasible (ρ unattainable: the cap vertex
+                  flows to both slots, θ clips to 0 — the cold search's
+                  documented degradation).
+
+    Every lane therefore holds a valid (or terminal-cap) straddle after
+    the two escape probes no matter how far λ* drifted, and the common
+    no-drift case spends its whole budget bisecting — a step whose carried
+    bracket still isolates the breakpoint returns the cold answer
+    bit-for-bit. FW_WARM_ITERS counts the bisection rows; with the 2-row
+    revalidation and 2 escape rows the warm step costs ~8 probe rows
+    against the cold search's ~25."""
+    lam_cap = jnp.float32(2.0 ** LAM_MAX_EXP)
+    slot = jnp.asarray([False, True])
+
+    lo_feas = Ci[0] <= rho        # λ* < λ_lo: both carried ends feasible
+    hi_infeas = Ci[1] > rho       # λ* > λ_hi: both carried ends infeasible
+    # modes: refine, down (re-anchor at 0), up (expand toward the cap)
+    lam = jnp.stack([jnp.where(lo_feas, 0.0, jnp.where(hi_infeas, lam_hi,
+                                                       lam_lo)),
+                     jnp.where(lo_feas, lam_lo, jnp.where(hi_infeas, lam_cap,
+                                                          lam_hi))])
+    # slot 0 = infeasible side, slot 1 = feasible side. Stale slots (0 in
+    # mode down until probe A lands, 1 in mode up until probe B) are
+    # overwritten before the bisection phase in every lane.
+    Z = jnp.stack([jnp.where(hi_infeas[..., None], Zi[1], Zi[0]),
+                   jnp.where(lo_feas[..., None], Zi[0], Zi[1])])
+    C = jnp.stack([jnp.where(hi_infeas, Ci[1], Ci[0]),
+                   jnp.where(lo_feas, Ci[0], Ci[1])])
+
+    # escape probe A: λ=0 (down), ×4 clamped to the cap (up), bisect
+    # (refine). Down lanes commit A to slot 0 unconditionally — it is the
+    # 0-anchor — and a feasible cost(0) raises the early-exit flag.
+    mid = jnp.where(lo_feas, 0.0,
+                    jnp.where(hi_infeas,
+                              jnp.minimum(4.0 * lam[0], lam_cap),
+                              0.5 * (lam[0] + lam[1])))
+    z_m, c_m = probe(mid)
+    feas = c_m <= rho
+    done = lo_feas & feas         # cost(0) <= ρ: z(0) is the optimum
+    z_done = z_m
+    sel = jnp.where(lo_feas, ~slot, feas == slot)
+    lam = jnp.where(sel, mid, lam)
+    Z = jnp.where(sel[:, None], z_m, Z)
+    C = jnp.where(sel, c_m, C)
+    up = hi_infeas & ~feas        # still infeasible at min(4·λ_hi, cap)
+
+    # escape probe B: unresolved-up jumps to the cap; everything else
+    # bisects its bracket.
+    mid = jnp.where(up, lam_cap, 0.5 * (lam[0] + lam[1]))
+    z_m, c_m = probe(mid)
+    feas = c_m <= rho
+    at_cap = up & ~feas           # ρ unattainable: cap vertex, both slots
+    sel = (feas == slot) | at_cap
+    lam = jnp.where(sel, mid, lam)
+    Z = jnp.where(sel[:, None], z_m, Z)
+    C = jnp.where(sel, c_m, C)
+
+    # pure bisection on a now-valid bracket — the cold phase-2 machinery
+    def bis(_, carry):
+        lam, Z, C = carry
+        mid = 0.5 * (lam[0] + lam[1])
+        z_m, c_m = probe(mid)
+        sel = (c_m <= rho) == slot
+        return (jnp.where(sel, mid, lam), jnp.where(sel[:, None], z_m, Z),
+                jnp.where(sel, c_m, C))
+
+    lam, Z, C = jax.lax.fori_loop(0, FW_WARM_ITERS, bis, (lam, Z, C))
+    z_mix = _mix_straddle(rho, Z[0], C[0], Z[1], C[1])
+    return jnp.where(done, z_done, z_mix), lam[0], lam[1]
 
 
 def _lp_topn_grid(w, c, n, rho, equality: bool):
@@ -320,6 +509,88 @@ def _lp_topn_grid(w, c, n, rho, equality: bool):
     rho = jnp.float32(rho)
     body = _grid_wide if kops.topn_lp_pallas() else _grid_tail
     return body(w, c, n, rho, equality)
+
+
+# ========================================================= AWC Frank-Wolfe
+def _awc_fw(dyn: bool, mu_bar, c_low, n, rho, engine: Optional[str],
+            fw_steps: Optional[int], fw_warm: Optional[bool]):
+    """Continuous greedy (Eq. 3): `fw_steps` Frank-Wolfe steps on the AWC
+    multilinear extension, each solving the relaxed LP for the current
+    gradient.
+
+    On the grid engine with ``fw_warm`` (the default) the λ bracket of each
+    step seeds the next (`_grid_tail_warm`): ~11 probe rows per warm step
+    against the cold search's ~25 — the dominant cost of an AWC tenant
+    round on a dispatch-bound host. The wide (accelerator) lowering keeps
+    per-step G-way rounds — batching is free there — and, when the Pallas
+    `awc_fw` kernel is active, fuses the gradient with the octave-ladder
+    probe so no gradient row is materialized between host-level ops.
+    ``engine="bisect"`` retains the PR-2 cold reference; ``fw_warm=False``
+    on the grid engine is the cold-start reference for the warm==cold
+    equivalence tests."""
+    fw_steps, fw_warm = _resolve_fw(fw_steps, fw_warm)
+    zeros = jnp.zeros_like(mu_bar, jnp.float32)
+    if _resolve_engine(engine) == "bisect":
+        vertex = _topn_given_lambda_dyn if dyn else _topn_given_lambda
+
+        def fw(i, z):
+            g = R.awc_multilinear_grad(z, mu_bar)
+            v = _lp_topn_bisect(vertex, g, c_low, n, rho, False)
+            return z + v / fw_steps
+        return jax.lax.fori_loop(0, fw_steps, fw, zeros)
+
+    c32 = c_low.astype(jnp.float32)
+    rho32 = jnp.asarray(rho, jnp.float32)
+    if kops.topn_lp_pallas():
+        # wide lowering: G-way rounds are already one fused batch per
+        # round, so warm-starting buys no rows; the fused kernel (when
+        # active) folds the gradient into the octave probe instead.
+        fused = kops.awc_fw_pallas()
+
+        def fw(i, z):
+            if fused:
+                g, oct_costs = kops.awc_fw(z[None], mu_bar[None], c32[None],
+                                           _octave_ladder()[None],
+                                           jnp.asarray(n, jnp.int32)[None])
+                v = _grid_wide_from_octave(g[0], c32, n, rho32, False,
+                                           oct_costs[0] <= rho32)
+            else:
+                g = R.awc_multilinear_grad(z, mu_bar).astype(jnp.float32)
+                v = _grid_wide(g, c32, n, rho32, False)
+            return z + v / fw_steps
+        return jax.lax.fori_loop(0, fw_steps, fw, zeros)
+
+    g0 = R.awc_multilinear_grad(zeros, mu_bar).astype(jnp.float32)
+    v0, lo, hi = _grid_tail_bracket(g0, c32, n, rho32, False)
+    return _awc_fw_cont(mu_bar, c32, n, rho32, fw_steps, fw_warm,
+                        v0, lo, hi)
+
+
+def _awc_fw_cont(mu_bar, c32, n, rho32, fw_steps: int, fw_warm: bool,
+                 v0, lo, hi):
+    """Frank-Wolfe continuation from an already-solved first step: FW
+    iterations 1..fw_steps−1, warm-seeded by step 0's λ bracket. Shared by
+    the single-kind AWC solve (step 0 = its own cold search) and the
+    mixed-fleet unified path (step 0 = the fleet-wide batched search)."""
+    if not fw_warm:
+        def fw(i, carry):
+            z, lo, hi = carry
+            g = R.awc_multilinear_grad(z, mu_bar).astype(jnp.float32)
+            v, lo, hi = _grid_tail_bracket(g, c32, n, rho32, False)
+            return z + v / fw_steps, lo, hi
+    else:
+        make = _probe_factory(c32, n, False)   # c-side tables: once/solve
+
+        def fw(i, carry):
+            z, lo, hi = carry
+            g = R.awc_multilinear_grad(z, mu_bar).astype(jnp.float32)
+            probe = make(g)
+            Zi, Ci = probe(jnp.stack([lo, hi]))
+            v, lo, hi = _grid_tail_warm(probe, rho32, lo, hi, Zi, Ci)
+            return z + v / fw_steps, lo, hi
+
+    z, _, _ = jax.lax.fori_loop(1, fw_steps, fw, (v0 / fw_steps, lo, hi))
+    return z
 
 
 # ============================================================ bisect engine
@@ -389,34 +660,48 @@ def lp_topn_dyn(w, c, n, rho, equality: bool, engine: Optional[str] = None):
 
 
 def solve_relaxed(kind: str, mu_bar, c_low, n: int, rho: float,
-                  engine: Optional[str] = None):
-    """Fractional z̃ solving the relaxed problem for the given reward model."""
+                  engine: Optional[str] = None,
+                  fw_steps: Optional[int] = None,
+                  fw_warm: Optional[bool] = None):
+    """Fractional z̃ solving the relaxed problem for the given reward model.
+
+    ``fw_steps``/``fw_warm`` (AWC only, trace-time static) select the
+    Frank-Wolfe step count and the warm-started λ search — see `_awc_fw`;
+    ``None`` resolves to `FW_STEPS` / `FW_WARM`."""
     if kind == "suc":
         return lp_topn(mu_bar, c_low, n, rho, equality=True, engine=engine)
     if kind == "aic":
         w = jnp.log(jnp.clip(mu_bar, R.EPS, 1.0))
         return lp_topn(w, c_low, n, rho, equality=True, engine=engine)
     if kind == "awc":
-        def fw(i, z):
-            g = R.awc_multilinear_grad(z, mu_bar)
-            v = lp_topn(g, c_low, n, rho, equality=False, engine=engine)
-            return z + v / FW_STEPS
-        return jax.lax.fori_loop(0, FW_STEPS, fw,
-                                 jnp.zeros_like(mu_bar, jnp.float32))
+        return _awc_fw(False, mu_bar, c_low, n, rho, engine, fw_steps,
+                       fw_warm)
     raise ValueError(kind)
 
 
 def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
                      kinds_present: Tuple[int, ...] = (0, 1, 2),
-                     engine: Optional[str] = None):
+                     engine: Optional[str] = None,
+                     fw_steps: Optional[int] = None,
+                     fw_warm: Optional[bool] = None):
     """`solve_relaxed` with a *traced* reward-model index (R.KIND_INDEX
     order: awc=0, suc=1, aic=2) and traced (n, rho) — lax.switch dispatch so
     a mixed-kind fleet solves every tenant inside one jitted program.
 
     ``kinds_present`` (static) prunes the dispatch to the kinds a fleet
     actually contains: under vmap the switch evaluates *every* branch for
-    the whole batch, and the AWC Frank-Wolfe branch alone is ~16 LP solves —
+    the whole batch, and the AWC Frank-Wolfe branch alone is ~8 LP solves —
     a uniform SUC/AIC fleet must not pay for it.
+
+    On the grid engine's CPU lowering a mixed batch does NOT pay one probe
+    chain per kind: the first LP solve of every kind is the same
+    parametric search on a per-row weight vector (μ̄ for SUC, ln μ̄ for
+    AIC, the z̃=0 gradient — clipped μ̄ — for AWC) with a per-row matroid
+    flag, so it runs as ONE unified `_grid_tail_bracket` chain for the
+    whole batch (sequential probe rows are the scarce resource on a
+    dispatch-bound host — branch chains under vmapped switch serialize,
+    they don't overlap). Only the AWC Frank-Wolfe *continuation* stays
+    behind the switch; SUC/AIC rows return the unified solve as-is.
 
     CONTRACT: every runtime kind_ix value must appear in kinds_present — an
     absent kind silently dispatches to another kind's branch (the index is
@@ -424,12 +709,8 @@ def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
     actual batch, as `router.fleet._kinds_present` does."""
 
     def awc():
-        def fw(i, z):
-            g = R.awc_multilinear_grad(z, mu_bar)
-            v = lp_topn_dyn(g, c_low, n, rho, equality=False, engine=engine)
-            return z + v / FW_STEPS
-        return jax.lax.fori_loop(0, FW_STEPS, fw,
-                                 jnp.zeros_like(mu_bar, jnp.float32))
+        return _awc_fw(True, mu_bar, c_low, n, rho, engine, fw_steps,
+                       fw_warm)
 
     def suc():
         return lp_topn_dyn(mu_bar, c_low, n, rho, equality=True,
@@ -443,6 +724,9 @@ def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
     present = tuple(sorted(set(kinds_present)))
     if len(present) == 1:
         return branches[present[0]]()
+    if _resolve_engine(engine) == "grid" and not kops.topn_lp_pallas():
+        return _solve_ix_unified(kind_ix, mu_bar, c_low, n, rho, present,
+                                 fw_steps, fw_warm)
     lut = np.zeros(len(branches), np.int32)      # kind index -> branch slot
     for slot, kind in enumerate(present):
         lut[kind] = slot
@@ -450,9 +734,50 @@ def solve_relaxed_ix(kind_ix, mu_bar, c_low, n, rho,
     return jax.lax.switch(slot, [branches[kind] for kind in present])
 
 
+AWC_IX = R.KIND_INDEX["awc"]
+
+
+def _solve_ix_unified(kind_ix, mu_bar, c_low, n, rho,
+                      present: Tuple[int, ...],
+                      fw_steps: Optional[int], fw_warm: Optional[bool]):
+    """Mixed-batch grid solve as one probe chain (see `solve_relaxed_ix`).
+
+    The per-row weight vector selects the kind's score transform; the
+    matroid flag (equality for SUC/AIC, inclusive for AWC) rides the probe
+    behind a select. Row results are bitwise identical to the single-kind
+    paths: the AWC z̃=0 gradient is exactly clip(μ̄, 0, 1−1e−6) (log1p(0)
+    and exp(0) are exact), and the traced-equality probe computes the
+    equality-side mask with the same ops as the static one."""
+    fw_steps, fw_warm = _resolve_fw(fw_steps, fw_warm)
+    c32 = c_low.astype(jnp.float32)
+    rho32 = jnp.asarray(rho, jnp.float32)
+    mu32 = mu_bar.astype(jnp.float32)
+    w = mu32 if 1 in present else None
+    if 2 in present:
+        w_aic = jnp.log(jnp.clip(mu32, R.EPS, 1.0))
+        w = w_aic if w is None else jnp.where(kind_ix == 2, w_aic, w)
+    if AWC_IX in present:
+        g0 = R.awc_multilinear_grad(jnp.zeros_like(mu32), mu_bar)
+        w = g0 if w is None else jnp.where(kind_ix == AWC_IX, g0, w)
+    # static equality when no AWC row exists: the positivity filter (and
+    # its per-probe select) compiles out entirely
+    equality = True if AWC_IX not in present else kind_ix != AWC_IX
+    z1, lo, hi = _grid_tail_bracket(w.astype(jnp.float32), c32, n, rho32,
+                                    equality)
+    if AWC_IX not in present:
+        return z1
+    return jax.lax.cond(
+        kind_ix == AWC_IX,
+        lambda: _awc_fw_cont(mu_bar, c32, n, rho32, fw_steps, fw_warm,
+                             z1, lo, hi),
+        lambda: z1)
+
+
 def solve_batch(kind_ix, mu_bar, c_low, n, rho,
                 kinds_present: Tuple[int, ...] = (0, 1, 2),
-                engine: Optional[str] = None):
+                engine: Optional[str] = None,
+                fw_steps: Optional[int] = None,
+                fw_warm: Optional[bool] = None):
     """Batched relax solve: one row per tenant, per-tenant task kind.
 
     kind_ix (M,) int32, mu_bar/c_low (M, K), n (M,) int32, rho (M,) — vmap
@@ -460,7 +785,8 @@ def solve_batch(kind_ix, mu_bar, c_low, n, rho,
     branch once for the whole batch and selects per row."""
     return jax.vmap(
         lambda ki, mb, cl, nn, rr: solve_relaxed_ix(ki, mb, cl, nn, rr,
-                                                    kinds_present, engine)
+                                                    kinds_present, engine,
+                                                    fw_steps, fw_warm)
     )(kind_ix, mu_bar, c_low, n, rho)
 
 

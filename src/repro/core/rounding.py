@@ -1,12 +1,35 @@
 """Discretization rounding (paper §4.2, Appendix B) — the scheduling cloud.
 
 Algorithm 3 (SUC/AIC; pairwise "pipage" rounding) in three flavours:
-  - `pairwise_round`      : jit-able lax.while_loop (used inside scanned sims)
+  - `pairwise_round`      : jit-able, fixed-trip lax.scan by default (used
+                            inside scanned sims); ``trips=None`` retains
+                            the data-dependent lax.while_loop reference
   - `pairwise_round_batch`: vmapped rows — the multi-tenant cloud path
   - `pairwise_round_np`   : numpy reference
 Both preserve marginals exactly: E[1_S] = z̃ — the property the regret proof
 (E[r̃(1_S)] ≥ r̃(z̃), per-direction convexity) and the violation martingale
-rest on.
+rest on. (Exactly up to the EPS finalization band — see `pairwise_round`.)
+
+WHILE-LOOP-UNDER-VMAP COST MODEL (why the fixed-trip scan exists): each
+merge finalizes at least one coordinate, so the loop runs at most K−1
+trips — but a `lax.while_loop` under vmap runs every row until the LAST
+row's condition clears, as select-masked iterations, and pays per trip a
+batched condition reduction on top of the body. For an AWC fleet the
+Frank-Wolfe z̃ has up to K fractional coordinates, so some row forces
+≈K−1 trips nearly every round and the while driver pays (body + cond) ×
+(K−1) with nothing to show for the early-exit machinery. The fixed
+(K−1)-trip `lax.scan` runs the *same* select-masked body — a finished
+row's merge is a no-op and its RNG key only advances on active trips, so
+the per-row result is bit-identical to the while loop — but drops the
+per-trip condition entirely (measured ~1.6× on the 64-tenant AWC
+rounding step). Two measured caveats bound the rewrite: the body must
+stay scatter-free (`_merge_step`) — a traced `z.at[i].set` splits every
+trip into its own dispatch — and the scan must stay *rolled*
+(unroll=1): unrolling re-dispatches each tiny op individually and loses
+to the while loop. When the fleet's z̃ is LP-shaped (SUC/AIC only: ≤2
+fractional coordinates ⇒ one merge) the while driver's early exit wins
+instead, so `router.fleet` picks the driver statically per fleet
+composition (`_round_trips`).
 
 Algorithm 2 (AWC; matroid swap rounding over cardinality-matroid bases,
 Chekuri-Vondrák-Zenklusen) is host-side numpy: decompose z̃ into a convex
@@ -29,53 +52,88 @@ EPS = 1e-5
 
 
 # ------------------------------------------------------------------ Alg. 3
-def pairwise_round(z, key):
-    """jit-able Algorithm 3. Returns a {0,1} float mask (K,)."""
-    z = jnp.clip(z.astype(jnp.float32), 0.0, 1.0)
+def _frac_mask(z):
+    return (z > EPS) & (z < 1.0 - EPS)
 
-    def frac_mask(z):
-        return (z > EPS) & (z < 1.0 - EPS)
 
-    def cond(carry):
-        z, _ = carry
-        return frac_mask(z).sum() >= 2
+def _merge_step(carry, _):
+    """One pairwise merge (the shared while/scan body). No-op — including
+    the key advance — when fewer than two fractional coordinates remain,
+    so fixed-trip and data-dependent drivers consume identical RNG.
 
-    def body(carry):
-        z, key = carry
-        f = frac_mask(z)
-        # two smallest fractional indices via masked min — same (i, j) the
-        # old stable argsort(~f) picked, without its per-row sort loop
-        # inside the vmapped while body on CPU
-        k = z.shape[0]
-        ar = jnp.arange(k)
-        i = jnp.min(jnp.where(f, ar, k))
-        j = jnp.min(jnp.where(f & (ar != i), ar, k))
-        zi, zj = z[i], z[j]
-        p = jnp.minimum(1.0 - zi, zj)
-        q = jnp.minimum(zi, 1.0 - zj)
-        key, k1 = jax.random.split(key)
-        u = jax.random.uniform(k1)
-        first = u < q / jnp.maximum(p + q, 1e-12)
-        zi_new = jnp.where(first, zi + p, zi - q)
-        zj_new = jnp.where(first, zj - p, zj + q)
-        z = z.at[i].set(zi_new).at[j].set(zj_new)
-        return z, key
+    Deliberately scatter-free: the pair is addressed through one-hot masks
+    (`ar == i`) and committed with one fused elementwise update — a traced
+    `z.at[i].set` scatter would split every unrolled trip into its own
+    dispatch on XLA CPU, which is the cost the fixed-trip driver exists to
+    remove."""
+    z, key = carry
+    f = _frac_mask(z)
+    active = f.sum() >= 2
+    # two smallest fractional indices via masked min — same (i, j) the
+    # old stable argsort(~f) picked, without its per-row sort loop
+    # inside the vmapped loop body on CPU
+    k = z.shape[0]
+    ar = jnp.arange(k)
+    i = jnp.min(jnp.where(f, ar, k - 1))
+    j = jnp.min(jnp.where(f & (ar != i), ar, k - 1))
+    oi = (ar == i) & active
+    oj = (ar == j) & active
+    zi = jnp.where(active, z[i], 0.0)
+    zj = jnp.where(active, z[j], 0.0)
+    p = jnp.minimum(1.0 - zi, zj)
+    q = jnp.minimum(zi, 1.0 - zj)
+    key_new, k1 = jax.random.split(key)
+    u = jax.random.uniform(k1)
+    first = u < q / jnp.maximum(p + q, 1e-12)
+    di = jnp.where(first, p, -q)             # zi moves by ±, zj opposite
+    z = z + di * (oi.astype(jnp.float32) - oj.astype(jnp.float32))
+    return (z, jnp.where(active, key_new, key)), None
 
-    z, key = jax.lax.while_loop(cond, body, (z, key))
-    # at most one fractional coordinate remains: Bernoulli(z) keeps marginals
-    f = frac_mask(z)
+
+def _finalize(z, key):
+    # at most one fractional coordinate remains: Bernoulli(z) keeps
+    # marginals. Residuals the merge loop left in (0, EPS] ∪ [1−EPS, 1)
+    # are snapped by jnp.round — a ≤EPS=1e-5 marginal bias per arm, the
+    # documented tolerance of the E[1_S] = z̃ guarantee (regression-tested
+    # on near-integral inputs).
+    f = _frac_mask(z)
     key, k1 = jax.random.split(key)
     u = jax.random.uniform(k1)
-    z = jnp.where(f, (u < z).astype(jnp.float32), jnp.round(z))
-    return z
+    return jnp.where(f, (u < z).astype(jnp.float32), jnp.round(z))
 
 
-def pairwise_round_batch(z, keys):
+def pairwise_round(z, key, trips: Optional[int] = 0):
+    """jit-able Algorithm 3. Returns a {0,1} float mask (K,).
+
+    ``trips`` (static) selects the loop driver: a positive int runs that
+    many fixed merge trips as a *rolled* lax.scan (K−1 suffices for any
+    z̃ — each trip finalizes ≥1 coordinate); 0 (default) resolves to K−1;
+    ``None`` runs the data-dependent lax.while_loop reference. All drivers
+    are bit-identical per row (property-tested), but see the module
+    docstring for why the scan wins inside vmapped fleet programs."""
+    z = jnp.clip(z.astype(jnp.float32), 0.0, 1.0)
+    if trips is None:
+        def cond(carry):
+            return _frac_mask(carry[0]).sum() >= 2
+
+        def body(carry):
+            return _merge_step(carry, None)[0]
+
+        z, key = jax.lax.while_loop(cond, body, (z, key))
+    else:
+        trips = int(trips) or z.shape[-1] - 1
+        (z, key), _ = jax.lax.scan(_merge_step, (z, key), None,
+                                   length=trips)
+    return _finalize(z, key)
+
+
+def pairwise_round_batch(z, keys, trips: Optional[int] = 0):
     """Batched Algorithm 3: z (M, K), keys (M, 2) — one row per tenant.
 
-    vmap of the while_loop body is select-masked, so each row's RNG stream
-    and result are identical to running `pairwise_round` on it alone."""
-    return jax.vmap(pairwise_round)(z, keys)
+    Both loop drivers are select-masked under vmap, so each row's RNG
+    stream and result are identical to running `pairwise_round` on it
+    alone (and identical across drivers)."""
+    return jax.vmap(lambda zz, kk: pairwise_round(zz, kk, trips))(z, keys)
 
 
 def pad_to_n_dyn(mask, scores, n, equality):

@@ -7,18 +7,50 @@ for queried arms — but the *budget accounting in the algorithm* stays
 worst-case (all of S_t), per the paper's "cautious" strategy.
 
 SUC / AIC: every selected arm executes its sub-task → F_t = S_t (o* = 1).
+
+The cascade is evaluated sort-free: the two argsorts of the original
+formulation (ascending-cost order + its inverse permutation) lower as
+per-row loops on XLA CPU and dominate the non-solver tail of a vmapped
+AWC fleet round. `_awc_cascade` instead ranks the selected arms by
+ascending cost on the shared stable-rank core (`core.ranks`, lower index
+wins ties — the exact tie order of a stable argsort) and thresholds:
+
+    observed_k = selected_k AND rank_k <= min{rank_j : selected_j succeeds}
+
+which is "cost ≤ cheapest successful cost" with the stable tie order
+preserved (a same-cost arm is observed iff its index precedes the first
+success). `_awc_cascade_argsort` retains the original formulation as the
+property-test reference.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.ranks import stable_desc_ranks
+
 SUCCESS_LEVEL = 1.0
 
 
 def _awc_cascade(action_mask, rewards, mean_cost):
-    # AWC cascade: order selected arms by cost ascending; observe a prefix
-    # ending at the first success (or the whole set if none succeed).
+    # ascending-cost stable ranks restricted to the selection: unselected
+    # arms rank after every selected arm (score -inf on the descending-rank
+    # core), selected ties resolve by index — identical order to the
+    # argsort reference. The first-success rank and the prefix mask are
+    # combined arithmetically, never as `pred & pred` feeding a
+    # select+reduce — this repo's XLA CPU miscompiles that fused pattern
+    # (see `core.ranks.topn_lp_cost`).
+    sel = action_mask > 0
+    k = action_mask.shape[-1]
+    r = stable_desc_ranks(jnp.where(sel, -mean_cost, -jnp.inf))
+    succ = (rewards >= SUCCESS_LEVEL).astype(jnp.int32) * sel.astype(
+        jnp.int32)
+    first = jnp.min(r + (1 - succ) * k)      # rank of the first success
+    return sel.astype(jnp.float32) * (r <= first).astype(jnp.float32)
+
+
+def _awc_cascade_argsort(action_mask, rewards, mean_cost):
+    """Original two-argsort cascade — the sort-free reference oracle."""
     order = jnp.argsort(jnp.where(action_mask > 0, mean_cost, jnp.inf))
     sel_sorted = action_mask[order]
     succ_sorted = (rewards[order] >= SUCCESS_LEVEL) & (sel_sorted > 0)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel fusing the AWC Frank-Wolfe step's gradient + λ probes.
+
+One FW step of the AWC continuous greedy (`core.relax._awc_fw`) needs the
+multilinear-extension gradient
+
+    g_k = μ_k · ∏_{j≠k} (1 − μ_j z̃_j)        (log-space, rewards module)
+
+and, for a λ batch (the grid engine's octave ladder), the inclusive-matroid
+top-n cost reductions of the Lagrangian scores g − λ·c:
+
+    out_bg = Σ_k cost_bk · [stable_rank(g_b − λ_bg·c_b)_k < n_b][g_bk > λ_bg·c_bk]
+
+Host-level lowerings materialize the (B, K) gradient between the gradient
+op and every probe op; this kernel keeps (z̃, μ, c) resident in VMEM,
+computes g once per row block, and loops the λ probes over it — the same
+tile-by-tile stable-rank accumulation as `kernels/topn_lp.py` (lower index
+wins ties; selection semantics identical to `core.ranks`). The kernel is
+AWC-specific: ``equality=False`` (the inclusive matroid of the FW oracle)
+is baked in.
+
+Outputs: (g (B, K) float32, costs (B, G) float32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30          # score pad: below any real Lagrangian score
+DEFAULT_BB = 8       # rows per grid cell
+DEFAULT_KT = 128     # arm-axis tile (lane width)
+
+
+def _kernel(z_ref, mu_ref, c_ref, lam_ref, n_ref, g_ref, out_ref, *,
+            kt: int, k_real: int):
+    z = z_ref[...]                                       # (bb, kp)
+    mu = mu_ref[...]
+    c = c_ref[...]
+    lams = lam_ref[...]                                  # (bb, gp)
+    n = n_ref[...]                                       # (bb, 1) int32
+    bb, kp = z.shape
+    gp = lams.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (bb, kp), 1)
+    valid = col < k_real
+
+    # multilinear gradient, log-space (mirrors rewards.awc_multilinear_grad;
+    # padded arms have μ = 0 -> log1p(0) = 0, so they drop out of the sum)
+    mu_c = jnp.minimum(mu, 1.0 - 1e-6)
+    logs = jnp.log1p(-mu_c * z)
+    total = jnp.sum(logs, axis=-1, keepdims=True)
+    g = mu_c * jnp.exp(total - logs)
+    g_ref[...] = g
+
+    def one_lam(gi, costs):
+        lam = jax.lax.dynamic_slice(lams, (0, gi), (bb, 1))  # (bb, 1)
+        pos = g > lam * c                    # inclusive matroid: s_k > 0
+        s = jnp.where(valid, g - lam * c, NEG)
+
+        def tile(jt, ranks):
+            sj = jax.lax.dynamic_slice(s, (0, jt * kt), (bb, kt))
+            cj = jt * kt + jax.lax.broadcasted_iota(jnp.int32, (bb, kt), 1)
+            beats = (sj[:, None, :] > s[:, :, None]) | (
+                (sj[:, None, :] == s[:, :, None])
+                & (cj[:, None, :] < col[:, :, None]))    # (bb, kp, kt)
+            return ranks + beats.sum(-1).astype(jnp.int32)
+
+        ranks = jax.lax.fori_loop(0, kp // kt, tile,
+                                  jnp.zeros((bb, kp), jnp.int32))
+        # arithmetic mask, mirroring core.ranks.topn_lp_cost
+        mask = (ranks < n).astype(jnp.float32) * pos
+        cost = jnp.sum(mask * c, axis=-1, keepdims=True)
+        return jax.lax.dynamic_update_slice(costs, cost, (0, gi))
+
+    out_ref[...] = jax.lax.fori_loop(0, gp, one_lam,
+                                     jnp.zeros((bb, gp), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "kt", "interpret"))
+def awc_fw(z, mu, cost, lams, n, *, bb: int = DEFAULT_BB,
+           kt: int = DEFAULT_KT, interpret: bool = True):
+    """z/mu/cost (B, K); lams (B, G); n (B,) int32 -> (g (B, K), (B, G))."""
+    b, k = z.shape
+    g_pts = lams.shape[1]
+    bp = -(-b // bb) * bb
+    kp = -(-k // kt) * kt
+
+    def pad(x, fill=0.0):
+        out = jnp.full((bp, kp), fill, jnp.float32)
+        return out.at[:b, :k].set(x.astype(jnp.float32))
+
+    lam_p = jnp.zeros((bp, g_pts), jnp.float32).at[:b].set(
+        lams.astype(jnp.float32))
+    nn = jnp.zeros((bp, 1), jnp.int32).at[:b, 0].set(
+        jnp.asarray(n, jnp.int32))
+
+    g, costs = pl.pallas_call(
+        functools.partial(_kernel, kt=kt, k_real=k),
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, g_pts), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, kp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, g_pts), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, g_pts), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pad(z), pad(mu), pad(cost), lam_p, nn)
+    return g[:b, :k], costs[:b]

@@ -10,6 +10,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import awc_fw as _awc
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
@@ -58,3 +59,24 @@ def topn_lp(score, cost, n, *, equality: bool = True):
         return _topn.topn_lp(score, cost, n, equality=equality,
                              interpret=_interpret())
     return _ref.topn_lp(score, cost, n, equality=equality)
+
+
+def awc_fw_pallas() -> bool:
+    """Whether `awc_fw` routes to the fused Pallas kernel (and whether the
+    AWC Frank-Wolfe wide lowering folds its gradient into the octave
+    probe). Same contract as `topn_lp_pallas`: compiled kernel on TPU,
+    fused pure-jnp path elsewhere; ``REPRO_AWC_FW_PALLAS=1`` forces the
+    kernel (interpret off-TPU — for tests/benchmarks only)."""
+    env = os.environ.get("REPRO_AWC_FW_PALLAS")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+def awc_fw(z, mu, cost, lams, n):
+    """Fused AWC FW step oracle: gradient + λ-probe cost reductions.
+
+    z/mu/cost (B, K), lams (B, G), n (B,) -> (g (B, K), costs (B, G))."""
+    if awc_fw_pallas():
+        return _awc.awc_fw(z, mu, cost, lams, n, interpret=_interpret())
+    return _ref.awc_fw(z, mu, cost, lams, n)

@@ -63,6 +63,21 @@ def topn_lp(score, cost, n, *, equality: bool = True):
     return topn_lp_cost(score, cost, n, equality)
 
 
+def awc_fw(z, mu, cost, lams, n):
+    """Fused AWC Frank-Wolfe oracle: multilinear gradient + inclusive-
+    matroid λ-probe cost reductions, on the shared selection core.
+
+    z/mu/cost (B, K), lams (B, G), n (B,) -> (g (B, K), costs (B, G))."""
+    from repro.core.ranks import lagrangian_topn_cost
+    from repro.core.rewards import awc_multilinear_grad
+    g = awc_multilinear_grad(z, mu).astype(jnp.float32)
+    costs = jax.vmap(
+        lambda gi, ci, li, ni: lagrangian_topn_cost(gi, ci, li, ni, False)
+    )(g, cost.astype(jnp.float32), lams.astype(jnp.float32),
+      jnp.asarray(n, jnp.int32))
+    return g, costs
+
+
 def ssd_chunk(xd, acum, bm, cm):
     """Intra-chunk SSD + chunk-state oracle.
 

@@ -96,29 +96,47 @@ def init_tenant_state(m: int, k: int,
 
 
 # ================================================================= per-tenant
+def _round_trips(k: int, kinds_present: Tuple[int, ...]) -> Optional[int]:
+    """Static rounding-driver choice (see `rounding.pairwise_round` and the
+    module docstring's cost model): AWC's Frank-Wolfe z̃ is fractional in
+    up to K coordinates, so any AWC tenant forces ≈K−1 merge trips and the
+    fixed (K−1)-trip scan — which drops the while driver's per-trip batch
+    condition — wins. A SUC/AIC-only fleet's LP-shaped z̃ (≤2 fractional)
+    needs one merge, and the while driver's early exit beats any fixed
+    trip count; both drivers are bit-identical per row."""
+    return k - 1 if AWC_IX in kinds_present else None
+
+
 def _tenant_act(stats, t, key, cfg: FleetConfig,
                 kinds_present: Tuple[int, ...],
-                engine: Optional[str] = None):
+                engine: Optional[str] = None,
+                fw_steps: Optional[int] = None):
     """One tenant's §4.1+§4.2 step (row shapes): UCB/LCB -> relaxed solve ->
     pairwise rounding -> base-matroid padding. All cfg fields are traced;
-    ``kinds_present`` statically prunes the kind dispatch and ``engine``
-    statically selects the parametric-LP engine (see relax)."""
+    ``kinds_present`` statically prunes the kind dispatch and ``engine``/
+    ``fw_steps`` statically select the parametric-LP engine and the AWC
+    Frank-Wolfe step count (see relax)."""
     mu_bar = cb.reward_ucb(stats, t, cfg.delta, cfg.alpha_mu)
     c_low = cb.cost_lcb(stats, t, cfg.delta, cfg.alpha_c)
     z = relax.solve_relaxed_ix(cfg.kind_ix, mu_bar, c_low, cfg.n, cfg.rho,
-                               kinds_present, engine)
-    mask = rounding.pairwise_round(z, key)
+                               kinds_present, engine, fw_steps)
+    mask = rounding.pairwise_round(
+        z, key, trips=_round_trips(z.shape[-1], kinds_present))
+    if kinds_present == (AWC_IX,):
+        return mask          # inclusive matroid: padding is the identity
     return rounding.pad_to_n_dyn(mask, mu_bar, cfg.n, cfg.kind_ix != AWC_IX)
 
 
 def _tenant_step(row: TenantState, t, mu, mean_cost, levels,
                  cfg: FleetConfig, kinds_present: Tuple[int, ...],
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 fw_steps: Optional[int] = None):
     """One protocol round for one tenant (vmapped by the fleet driver)."""
     key, ka, kr, kc = jax.random.split(row.key, 4)
     mask = jax.lax.cond(
         (t - 1) % cfg.sync_every == 0,
-        lambda: _tenant_act(row.stats, t, ka, cfg, kinds_present, engine),
+        lambda: _tenant_act(row.stats, t, ka, cfg, kinds_present, engine,
+                            fw_steps),
         lambda: row.prev_mask)
     x = cost_model.sample_rewards(kr, mu, levels)
     y = cost_model.sample_costs(kc, mean_cost)
@@ -138,15 +156,16 @@ def _tenant_step(row: TenantState, t, mu, mean_cost, levels,
 # ================================================================== fleet run
 @functools.partial(jax.jit,
                    static_argnames=("T", "levels", "unroll", "kinds_present",
-                                    "engine"))
+                                    "engine", "fw_steps"))
 def _scan_fleet(state0: TenantState, cfg: FleetConfig, mu, mean_cost,
                 T: int, levels: Tuple[float, ...], unroll: int,
                 kinds_present: Tuple[int, ...],
-                engine: Optional[str] = None):
+                engine: Optional[str] = None,
+                fw_steps: Optional[int] = None):
     def scan_step(state, t):
         return jax.vmap(
             lambda row, c: _tenant_step(row, t, mu, mean_cost, levels, c,
-                                        kinds_present, engine)
+                                        kinds_present, engine, fw_steps)
         )(state, cfg)
 
     return jax.lax.scan(scan_step, state0, jnp.arange(1, T + 1),
@@ -157,27 +176,32 @@ def _kinds_present(cfg: FleetConfig) -> Tuple[int, ...]:
     return tuple(sorted(set(np.asarray(cfg.kind_ix).tolist())))
 
 
-@functools.partial(jax.jit, static_argnames=("kinds_present", "engine"))
+@functools.partial(jax.jit, static_argnames=("kinds_present", "engine",
+                                             "fw_steps"))
 def _relaxed_batch(stats, t, cfg: FleetConfig,
                    kinds_present: Tuple[int, ...],
-                   engine: Optional[str] = None):
+                   engine: Optional[str] = None,
+                   fw_steps: Optional[int] = None):
     def one(stats_row, t_row, cfg_row):
         mu_bar = cb.reward_ucb(stats_row, t_row, cfg_row.delta,
                                cfg_row.alpha_mu)
         c_low = cb.cost_lcb(stats_row, t_row, cfg_row.delta, cfg_row.alpha_c)
         return relax.solve_relaxed_ix(cfg_row.kind_ix, mu_bar, c_low,
                                       cfg_row.n, cfg_row.rho, kinds_present,
-                                      engine)
+                                      engine, fw_steps)
     return jax.vmap(one)(stats, t, cfg)
 
 
-def relaxed_batch(stats, t, cfg: FleetConfig, engine: Optional[str] = None):
+def relaxed_batch(stats, t, cfg: FleetConfig, engine: Optional[str] = None,
+                  fw_steps: Optional[int] = None):
     """Batched §4.1 local-server step: stats (M, K), t (M,) -> z̃ (M, K).
 
     This is what a real local-server pod calls per sync round; the cloud
     side then discretizes with `cloud.round_batch`. ``engine`` selects the
-    parametric-LP engine (None -> `relax.DEFAULT_ENGINE`)."""
-    return _relaxed_batch(stats, t, cfg, _kinds_present(cfg), engine)
+    parametric-LP engine (None -> `relax.DEFAULT_ENGINE`); ``fw_steps``
+    the AWC Frank-Wolfe step count (None -> `relax.FW_STEPS`)."""
+    return _relaxed_batch(stats, t, cfg, _kinds_present(cfg), engine,
+                          fw_steps)
 
 
 @dataclasses.dataclass
@@ -192,21 +216,23 @@ class FleetResult:
 def simulate_fleet(pool: Pool, cfg: FleetConfig, *, T: int,
                    keys: Optional[jnp.ndarray] = None, seed: int = 0,
                    unroll: int = 1,
-                   engine: Optional[str] = None) -> FleetResult:
+                   engine: Optional[str] = None,
+                   fw_steps: Optional[int] = None) -> FleetResult:
     """Advance M tenants T rounds against the shared replica pool.
 
     Every tenant draws its own rewards/costs (its users' queries) from the
     shared pool profile; per-tenant PRNG keys make trajectories reproducible
     tenant-by-tenant regardless of fleet size. ``engine`` selects the
     parametric-LP engine (None -> `relax.DEFAULT_ENGINE`; "bisect" is the
-    sequential reference path kept for equivalence tests and benchmarks)."""
+    sequential reference path kept for equivalence tests and benchmarks);
+    ``fw_steps`` the AWC Frank-Wolfe step count (None -> `relax.FW_STEPS`)."""
     m = cfg.m
     state0 = init_tenant_state(m, pool.k, keys=keys, seed=seed)
     mu = jnp.asarray(pool.mu, jnp.float32)
     mean_cost = jnp.asarray(pool.mean_cost, jnp.float32)
     state, (rew, cost, act, obs) = _scan_fleet(
         state0, cfg, mu, mean_cost, T, tuple(pool.reward_levels), unroll,
-        _kinds_present(cfg), engine)
+        _kinds_present(cfg), engine, fw_steps)
     return FleetResult(reward=np.asarray(rew).T,
                        cost=np.asarray(cost).T,
                        action=np.asarray(act).transpose(1, 0, 2),

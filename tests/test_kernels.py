@@ -133,6 +133,97 @@ def test_topn_lp_kernel_tie_order():
     np.testing.assert_allclose(np.asarray(out), [11.0, 3.0], atol=1e-6)
 
 
+# ================================================================ awc_fw
+@pytest.mark.parametrize("b,k,g", [
+    (4, 9, 25),       # fleet-like: octave ladder over the paper pool
+    (8, 128, 4),      # exact tile fit
+    (5, 130, 3),      # K spills into a second tile
+    (33, 40, 2),      # B not a multiple of the row block
+])
+def test_awc_fw_kernel_matches_oracle(b, k, g):
+    """Fused gradient + λ-probe kernel vs the pure-jnp oracle: gradients
+    allclose, probe cost reductions allclose (selection semantics shared
+    through core.ranks)."""
+    from repro.kernels import awc_fw as ak
+    k0 = jax.random.PRNGKey(b * 1000 + k + g)
+    z = jax.random.uniform(k0, (b, k), jnp.float32)
+    mu = jax.random.uniform(jax.random.fold_in(k0, 1), (b, k), jnp.float32,
+                            0.05, 0.99)
+    cost = jax.random.uniform(jax.random.fold_in(k0, 2), (b, k), jnp.float32,
+                              0.01, 0.6)
+    lams = jax.random.uniform(jax.random.fold_in(k0, 3), (b, g), jnp.float32,
+                              0.0, 4.0)
+    n = jax.random.randint(jax.random.fold_in(k0, 4), (b,), 1, k + 1)
+    grad, costs = ak.awc_fw(z, mu, cost, lams, n, interpret=True)
+    grad_w, costs_w = ref.awc_fw(z, mu, cost, lams, n)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(grad_w),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(costs), np.asarray(costs_w),
+                               atol=1e-4)
+
+
+def test_awc_fw_kernel_tie_order_and_positivity():
+    """Exactly-representable ties: the kernel's stable tie handling and
+    inclusive-matroid positivity filter must match the shared rank core."""
+    from repro.kernels import awc_fw as ak
+    z = jnp.zeros((2, 4), jnp.float32)      # gradient == clipped mu
+    mu = jnp.asarray([[0.5, 0.5, 0.25, 0.5],
+                      [0.5, 0.25, 0.125, 0.0625]], jnp.float32)
+    cost = jnp.asarray([[1.0, 2.0, 1.0, 4.0],
+                        [1.0, 1.0, 1.0, 1.0]], jnp.float32)
+    lams = jnp.asarray([[0.0, 0.25], [0.0, 0.25]], jnp.float32)
+    n = jnp.asarray([3, 2], jnp.int32)
+    grad, costs = ak.awc_fw(z, mu, cost, lams, n, interpret=True)
+    _, costs_w = ref.awc_fw(z, mu, cost, lams, n)
+    np.testing.assert_allclose(np.asarray(costs), np.asarray(costs_w),
+                               atol=0)
+    # row 0, λ=0.25: scores (0.25, 0, 0, -0.5) -> only arm 0 positive
+    assert costs[0, 1] == 1.0
+
+
+def test_awc_fw_ops_dispatch(monkeypatch):
+    """`ops.awc_fw` must agree between the forced-Pallas (interpret) and
+    pure-jnp dispatch paths."""
+    k0 = jax.random.PRNGKey(7)
+    z = jax.random.uniform(k0, (5, 9), jnp.float32)
+    mu = jax.random.uniform(jax.random.fold_in(k0, 1), (5, 9), jnp.float32,
+                            0.05, 0.99)
+    cost = jax.random.uniform(jax.random.fold_in(k0, 2), (5, 9), jnp.float32,
+                              0.01, 0.6)
+    lams = jnp.broadcast_to(jnp.asarray([0.0, 0.5, 1.0, 8.0]), (5, 4))
+    n = jnp.asarray([1, 2, 3, 4, 9], jnp.int32)
+    monkeypatch.setenv("REPRO_AWC_FW_PALLAS", "0")
+    g_plain, c_plain = ops.awc_fw(z, mu, cost, lams, n)
+    monkeypatch.setenv("REPRO_AWC_FW_PALLAS", "1")
+    g_forced, c_forced = ops.awc_fw(z, mu, cost, lams, n)
+    np.testing.assert_allclose(np.asarray(g_plain), np.asarray(g_forced),
+                               atol=2e-6)
+    np.testing.assert_allclose(np.asarray(c_plain), np.asarray(c_forced),
+                               atol=1e-5)
+
+
+def test_awc_solve_fused_wide_lowering_matches_reference(monkeypatch):
+    """The AWC relax solve on the fused-kernel wide lowering (awc_fw +
+    topn_lp in interpret mode) stays decision-equivalent to the bisect
+    reference."""
+    from repro.core import relax, rewards as R
+    monkeypatch.setenv("REPRO_TOPN_LP_PALLAS", "1")
+    monkeypatch.setenv("REPRO_AWC_FW_PALLAS", "1")
+    rng = np.random.default_rng(3)
+    k, n = 7, 3
+    mu = jnp.asarray(rng.uniform(0.05, 0.95, k), jnp.float32)
+    c = rng.uniform(0.01, 0.6, k)
+    rho = float(np.sort(c)[:n].sum() * 1.6)
+    zg = np.array(relax.solve_relaxed("awc", mu, jnp.asarray(c, jnp.float32),
+                                      n, rho, engine="grid"))
+    zb = np.array(relax.solve_relaxed("awc", mu, jnp.asarray(c, jnp.float32),
+                                      n, rho, engine="bisect"))
+    vg = float(R.relaxed_reward("awc", jnp.array(zg), mu))
+    vb = float(R.relaxed_reward("awc", jnp.array(zb), mu))
+    assert vg >= vb - 1e-5, (vg, vb)
+    assert float(c @ zg) <= rho * 1.01 + 1e-4
+
+
 def test_topn_lp_ops_dispatch(monkeypatch):
     """`ops.topn_lp` must agree between the forced-Pallas (interpret) and
     pure-jnp dispatch paths."""
