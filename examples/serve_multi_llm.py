@@ -6,6 +6,11 @@ runs the full local-cloud protocol: relax -> round -> dispatch -> generate ->
 measure quality -> Eq.(6) update. The router learns to cascade to the
 trained (cheap, good) model and stops querying the expensive ones.
 
+Generation is served by the continuous-batching engine: four tenants share
+the pool, so each round their requests coalesce into per-replica slot-cache
+decode batches and bandit feedback is applied asynchronously as each
+completion lands (paper App. E.3).
+
   PYTHONPATH=src python examples/serve_multi_llm.py
 """
 from repro.launch.serve import main
@@ -13,4 +18,5 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     main(["--kind", "awc", "--rounds", "25", "--n", "2", "--rho", "0.6",
           "--pool", "h2o-danube-3-4b,mamba2-780m,starcoder2-7b",
-          "--train-first", "1"])
+          "--train-first", "1", "--dispatch", "continuous",
+          "--tenants", "4"])

@@ -4,7 +4,11 @@ Grid (B, H, n_kv): the cache is streamed HBM->VMEM in bk-sized blocks along
 the sequence axis (which is also how the cache is sharded across the "model"
 mesh axis — each chip streams its resident slice); the online-softmax carry
 sits in VMEM scratch. Slots beyond ``pos`` are masked, so a ring-buffer /
-partially-filled cache is handled by the same kernel.
+partially-filled cache is handled by the same kernel. ``pos`` may be a
+scalar (legacy batched path) or a (B,) vector — one position per cache row,
+the slot-indexed layout the continuous-batching serving engine decodes:
+every grid row reads its own position out of SMEM, so a single kernel launch
+advances slots admitted at different times.
 """
 from __future__ import annotations
 
@@ -30,7 +34,7 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    pos = pos_ref[0]
+    pos = pos_ref[pl.program_id(0)]
     k_start = ki * bk
 
     @pl.when(k_start <= pos)
@@ -62,7 +66,8 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(jax.jit, static_argnames=("bk", "interpret"))
 def decode_attention(q, k, v, pos, *, bk: int = DEFAULT_BK,
                      interpret: bool = True):
-    """q (B,1,H,hd); cache k/v (B,T,KV,hd); pos scalar int32 (last valid)."""
+    """q (B,1,H,hd); cache k/v (B,T,KV,hd); pos scalar or (B,) int32 (last
+    valid slot per row)."""
     b, _, h, hd = q.shape
     t, kv = k.shape[1], k.shape[2]
     n_rep = h // kv
@@ -74,7 +79,7 @@ def decode_attention(q, k, v, pos, *, bk: int = DEFAULT_BK,
     qt = jnp.swapaxes(q, 1, 2)                 # (B,H,1,hd)
     kt = jnp.swapaxes(k, 1, 2)                 # (B,KV,T,hd)
     vt = jnp.swapaxes(v, 1, 2)
-    pos_arr = jnp.full((1,), pos, jnp.int32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
     kernel = functools.partial(_kernel, scale=scale, bk=bk, n_kv=n_kv)
     out = pl.pallas_call(

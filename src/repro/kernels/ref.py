@@ -41,15 +41,17 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 def decode_attention(q, k, v, pos):
-    """q (B,1,H,hd); cache k/v (B,T,KV,hd); pos scalar — mask slots > pos."""
+    """q (B,1,H,hd); cache k/v (B,T,KV,hd); pos scalar or (B,) — mask slots
+    beyond each row's position."""
     b, _, h, hd = q.shape
     t = k.shape[1]
     k = _repeat_kv(k, h // k.shape[2])
     v = _repeat_kv(v, h // v.shape[2])
     sc = jnp.einsum("bshk,bthk->bhst", q.astype(jnp.float32),
                     k.astype(jnp.float32)) / math.sqrt(hd)
-    valid = jnp.arange(t) <= pos
-    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    pos_r = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    valid = jnp.arange(t)[None, :] <= pos_r[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
     w = jax.nn.softmax(sc, axis=-1)
     return jnp.einsum("bhst,bthk->bshk", w,
                       v.astype(jnp.float32)).astype(q.dtype)

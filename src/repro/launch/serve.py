@@ -3,9 +3,14 @@
 Smoke mode builds reduced pool members on CPU (training one of them briefly
 so the pool has a quality gradient), then runs the full local-cloud loop:
 relax (local) -> round + dispatch (cloud) -> generation -> feedback.
+``--dispatch continuous`` (the default) serves generation through the
+slot-indexed continuous-batching scheduler; ``--tenants M`` steps M local
+servers against the shared pool so their requests coalesce into per-replica
+decode batches (the throughput case — see benchmarks/serve_throughput.py).
 
   PYTHONPATH=src python -m repro.launch.serve --kind awc --rounds 30 \
-      --pool h2o-danube-3-4b,mamba2-780m,starcoder2-7b --train-first
+      --pool h2o-danube-3-4b,mamba2-780m,starcoder2-7b --train-first 1 \
+      --dispatch continuous --tenants 4
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ from repro.core.policies import PolicyConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import model as M
 from repro.router.cloud import Replica, SchedulingCloud
-from repro.router.service import MultiLLMService
+from repro.router.service import FleetService, MultiLLMService
 from repro.serving.engine import Engine
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
@@ -67,6 +72,13 @@ def main(argv=None):
                     help="App. E.3 async local-cloud sync batch")
     ap.add_argument("--train-first", type=int, default=1,
                     help="how many pool members to pre-train on the stream")
+    ap.add_argument("--dispatch", default="continuous",
+                    choices=["continuous", "sequential"],
+                    help="continuous-batching scheduler vs the blocking "
+                         "per-arm reference dispatch")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="local servers sharing the pool; >1 coalesces "
+                         "tenant requests into shared decode batches")
     args = ap.parse_args(argv)
 
     names = args.pool.split(",")
@@ -78,14 +90,26 @@ def main(argv=None):
     pcfg = PolicyConfig(kind=args.kind, k=len(names), n=args.n,
                         rho=args.rho, delta=0.1)
     cloud = SchedulingCloud(pcfg, replicas)
-    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+    if args.tenants > 1:
+        fs = FleetService(pcfg, cloud, data, n_tenants=args.tenants,
+                          prompt_len=8, max_new=8,
                           batch_size=args.batch_size)
+        svc = fs.tenants[0]
+        runner = fs
+    else:
+        svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                              batch_size=args.batch_size,
+                              dispatch=args.dispatch)
+        runner = svc
     t0 = time.time()
-    svc.run(args.rounds)
+    runner.run(args.rounds)
     dt = time.time() - t0
     s = svc.summary()
-    print(f"\n{args.rounds} rounds in {dt:.1f}s "
-          f"({dt / args.rounds:.2f} s/round)")
+    gen_tokens = sum(
+        int(h.observed.sum()) for h in svc.history) * args.tenants * 8 * 8
+    print(f"\n{args.rounds} rounds x {args.tenants} tenant(s) in {dt:.1f}s "
+          f"({args.rounds * args.tenants / dt:.2f} rounds/s, "
+          f"~{gen_tokens / dt:.0f} tok/s incl. prompt)")
     print(f"mean observed reward {s['mean_observed_reward']:.3f}  "
           f"mean cost {s['mean_cost']:.4f}  violation {s['violation']:.4f}")
     print("selections:", dict(zip(names, svc.local.t_mu.astype(int))))

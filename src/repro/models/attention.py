@@ -212,6 +212,44 @@ def apply_attention(cfg, p, x, positions, *, causal=True, xkv=None,
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 
+# ------------------------------------------------------------------ prefill
+def apply_attention_prefill(cfg, p, x, positions, cache_len: int, *,
+                            causal=True, window="cfg", impl="auto",
+                            cache_dtype=None):
+    """Full-sequence attention that also emits the decode KV cache slice.
+
+    Same math as `apply_attention`, but the (rope'd) per-layer K/V are kept
+    and scattered into a zero-initialised ``cache_len``-long cache at
+    slot = position % cache_len — the exact layout `apply_attention_decode`
+    writes token-by-token, so decode can continue from position S without
+    replaying the prompt. For ring caches (sliding window) only the last
+    ``cache_len`` prompt tokens are kept (earlier ones would be masked out
+    by the ring validity test anyway). Returns (out (B,S,D), cache)."""
+    if window == "cfg":
+        window = cfg.sliding_window
+    q, k, v = _qkv(cfg, p, x)
+    if cfg.rope != "none":
+        rot = rope_mod.positional(cfg, positions)
+        q, k = rot(q), rot(k)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    o = attend(q, k, v, causal=causal, window=window, impl=impl)
+    o = shard(o, "batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+    b, s, kvh, hd = k.shape
+    t = cache_len
+    dt = cache_dtype or k.dtype
+    keep = min(s, t)
+    rows = jnp.arange(b)[:, None]
+    slots = positions[:, s - keep:] % t                    # (B, keep)
+    ck = jnp.zeros((b, t, kvh, hd), dt).at[rows, slots].set(
+        k[:, s - keep:].astype(dt))
+    cv = jnp.zeros((b, t, kvh, hd), dt).at[rows, slots].set(
+        v[:, s - keep:].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
 # ------------------------------------------------------------------ decode
 def init_cache(cfg, batch: int, max_len: int, dtype):
     hd, kv = cfg.head_dim, cfg.n_kv_heads
@@ -228,13 +266,18 @@ def cache_axes():
 
 def apply_attention_decode(cfg, p, x, cache, pos, *, window="cfg",
                            cross=False):
-    """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd); pos scalar.
+    """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd); pos is a scalar
+    int32 (all rows at the same position — the legacy batched path) or a
+    (B,) int32 vector (slot-indexed serving: every cache row advances at
+    its own position, so one step can serve many tenants' requests).
 
     cross=True: cache holds encoder K/V, no update, no causal mask.
     Sliding-window configs keep a ring-buffer cache of size==window.
     """
     if window == "cfg":
         window = cfg.sliding_window
+    b = x.shape[0]
+    pos_r = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))   # (B,)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     if "bq" in p:
         q = q + p["bq"]
@@ -244,14 +287,15 @@ def apply_attention_decode(cfg, p, x, cache, pos, *, window="cfg",
         if "bk" in p:
             k1, v1 = k1 + p["bk"], v1 + p["bv"]
         if cfg.rope != "none":
-            rot = rope_mod.positional(cfg, jnp.full((x.shape[0], 1), pos))
+            rot = rope_mod.positional(cfg, pos_r[:, None])
             q, k1 = rot(q), rot(k1)
         t = cache["k"].shape[1]
-        slot = pos % t if window is not None else pos
-        cache = {
-            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k1, slot, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v1, slot, 1),
-        }
+        slot = pos_r % t if window is not None else pos_r
+        # per-row cache write (vmapped dynamic-update == scatter at slot)
+        row_upd = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, 0))
+        cache = {"k": row_upd(cache["k"], k1.astype(cache["k"].dtype), slot),
+                 "v": row_upd(cache["v"], v1.astype(cache["v"].dtype), slot)}
     k, v = cache["k"], cache["v"]
     b, t, kvh, hd = k.shape
     h = q.shape[2]
@@ -267,15 +311,15 @@ def apply_attention_decode(cfg, p, x, cache, pos, *, window="cfg",
     sc = sc / math.sqrt(hd)
     sc = shard(sc, "batch", None, None, "cache_seq")
     if not cross:
-        kidx = jnp.arange(t)
+        kidx = jnp.arange(t)[None, :]
         if window is not None:
             # ring buffer: valid slots are those written in the last `window`
-            # steps: slot index distance from current pos
-            age = (pos % t - kidx) % t
-            valid = (age < jnp.minimum(pos + 1, t))
+            # steps: slot index distance from current pos (per row)
+            age = (pos_r[:, None] % t - kidx) % t
+            valid = (age < jnp.minimum(pos_r[:, None] + 1, t))
         else:
-            valid = kidx <= pos
-        sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+            valid = kidx <= pos_r[:, None]
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
     w = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     o = jnp.einsum("bhst,bthk->bshk", w, v)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache

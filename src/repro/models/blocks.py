@@ -78,6 +78,55 @@ def apply_decoder_block(cfg, p, x, enc_out, positions, *, impl="auto"):
     return shard(x, "batch", "seq", "embed")
 
 
+# ------------------------------------------------------------------ prefill
+# Forward-pass variants that also emit the per-layer decode cache slice —
+# the prefill->cache handoff the serving engine admits into its slot cache
+# (no prompt replay through decode_step).
+def apply_dense_block_prefill(cfg, p, x, positions, cache_len, *,
+                              impl="auto", cache_dtype=None):
+    h, c = attn_mod.apply_attention_prefill(
+        cfg, p["attn"], apply_norm(cfg, p["ln1"], x), positions, cache_len,
+        impl=impl, cache_dtype=cache_dtype)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return shard(x, "batch", "seq", "embed"), c
+
+
+def apply_moe_block_prefill(cfg, p, x, positions, cache_len, *,
+                            impl="auto", cache_dtype=None):
+    h, c = attn_mod.apply_attention_prefill(
+        cfg, p["attn"], apply_norm(cfg, p["ln1"], x), positions, cache_len,
+        impl=impl, cache_dtype=cache_dtype)
+    x = x + h
+    xn = apply_norm(cfg, p["ln2"], x)
+    y, _ = moe_mod.apply_moe_auto(cfg, p["moe"], xn)
+    if cfg.dense_residual:
+        y = y + apply_mlp(cfg, p["mlp"], xn)
+    return shard(x + y, "batch", "seq", "embed"), c
+
+
+def apply_ssm_block_prefill(cfg, p, x, *, cache_dtype=None):
+    y, c = ssm_mod.apply_ssm_prefill(cfg, p["ssm"],
+                                     apply_norm(cfg, p["ln1"], x),
+                                     cache_dtype=cache_dtype)
+    return shard(x + y, "batch", "seq", "embed"), c
+
+
+def apply_decoder_block_prefill(cfg, p, x, enc_out, positions, cache_len, *,
+                                impl="auto", cache_dtype=None):
+    xn = apply_norm(cfg, p["ln1"], x)
+    h, c = attn_mod.apply_attention_prefill(
+        cfg, p["self"], xn, positions, cache_len, causal=True, window=None,
+        impl=impl, cache_dtype=cache_dtype)
+    x = x + h
+    h = attn_mod.apply_attention(cfg, p["cross"], apply_norm(cfg, p["ln2"], x),
+                                 positions, causal=False, xkv=enc_out,
+                                 impl=impl, window=None)
+    x = x + h
+    x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln3"], x))
+    return shard(x, "batch", "seq", "embed"), c
+
+
 # ------------------------------------------------------------------ decode
 def apply_dense_block_decode(cfg, p, x, cache, pos, *, window="cfg"):
     xn = apply_norm(cfg, p["ln1"], x)

@@ -232,6 +232,126 @@ def _forward_audio(cfg, params, inputs, *, impl="auto", remat=False):
     return unembed(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
 
 
+# ===================================================================== prefill
+def prefill_len(cfg: ArchConfig, prompt_len: int) -> int:
+    """Number of cache positions a prompt of ``prompt_len`` tokens occupies
+    after `prefill` (VLM prompts carry a vision-patch prefix)."""
+    if cfg.family == "vlm":
+        return prompt_len + max(prompt_len // VLM_VISION_FRACTION, 1)
+    return prompt_len
+
+
+def prefill(cfg: ArchConfig, params, inputs: Dict[str, Any], max_len: int, *,
+            impl: str = "auto", cache_dtype=None
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Prompt forward that also emits the decode-cache pytree.
+
+    The prefill half of the serving engine's prefill/decode split: one
+    full-sequence forward over the prompt whose per-layer K/V (attention),
+    final SSD state + conv window (Mamba2) and cross-attention K/V (enc-dec)
+    are written directly into a fresh ``max_len``-long decode cache — the
+    same pytree `init_decode_caches` allocates and `decode_step` advances,
+    so generation continues from position `prefill_len(cfg, S)` without
+    replaying the prompt through the decode path.
+
+    Returns (last_logits (B, V) — the next-token logits, cache).
+    """
+    w = cfg.sliding_window
+    attn_len = min(max_len, w) if w else max_len
+    if cfg.family == "audio":
+        return _prefill_audio(cfg, params, inputs, attn_len, impl=impl,
+                              cache_dtype=cache_dtype)
+
+    if cfg.family == "vlm":
+        vis = jnp.einsum("bsd,de->bse", inputs["vision_embeds"],
+                         params["vision_proj"]["w"])
+        txt = embed_tokens(cfg, params["embed"], inputs["tokens"])
+        x = jnp.concatenate([vis.astype(txt.dtype), txt], axis=1)
+    else:
+        x = embed_tokens(cfg, params["embed"], inputs["tokens"])
+    b, s, _ = x.shape
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cdt = cache_dtype or x.dtype
+
+    def scan_cache(body, h, stacked, n):
+        def step(carry, p_l):
+            return body(carry, p_l)
+        return _scan(step, h, stacked, length=n)
+
+    if cfg.family in ("dense", "vlm"):
+        def body(h, p_l):
+            return blocks.apply_dense_block_prefill(
+                cfg, p_l, h, positions, attn_len, impl=impl, cache_dtype=cdt)
+        x, attn_c = scan_cache(body, x, params["layers"], cfg.n_layers)
+        cache = {"attn": attn_c}
+    elif cfg.family == "moe":
+        def body(h, p_l):
+            return blocks.apply_moe_block_prefill(
+                cfg, p_l, h, positions, attn_len, impl=impl, cache_dtype=cdt)
+        x, attn_c = scan_cache(body, x, params["layers"], cfg.n_layers)
+        cache = {"attn": attn_c}
+    elif cfg.family == "ssm":
+        def body(h, p_l):
+            return blocks.apply_ssm_block_prefill(cfg, p_l, h,
+                                                  cache_dtype=cdt)
+        x, ssm_c = scan_cache(body, x, params["layers"], cfg.n_layers)
+        cache = {"ssm": ssm_c}
+    elif cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        groups = cfg.n_layers // period
+        grouped = _group_stacked(params["layers"], groups)
+        shared = params["shared"]
+
+        def group_body(h, p_g):
+            h, ac = blocks.apply_dense_block_prefill(
+                cfg, shared, h, positions, attn_len, impl=impl,
+                cache_dtype=cdt)
+
+            def inner(h2, p_l):
+                return blocks.apply_ssm_block_prefill(cfg, p_l, h2,
+                                                      cache_dtype=cdt)
+            h, c_g = scan_cache(inner, h, p_g, period)
+            return h, (c_g, ac)
+
+        x, (ssm_c, attn_c) = scan_cache(group_body, x, grouped, groups)
+        cache = {"ssm": jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), ssm_c),
+                 "shared_attn": attn_c}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["lnf"], x[:, -1:])
+    return unembed(cfg, params["embed"], x)[:, 0], cache
+
+
+def _prefill_audio(cfg, params, inputs, attn_len, *, impl="auto",
+                   cache_dtype=None):
+    frames = inputs["frames"]
+    enc = encode_audio(cfg, params, frames, impl=impl)
+    cross = fill_cross_caches(cfg, params, enc)
+
+    tokens = inputs["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    x = x + sinusoid(s, cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    cdt = cache_dtype or x.dtype
+
+    def body(h, p_l):
+        return blocks.apply_decoder_block_prefill(
+            cfg, p_l, h, enc, positions, attn_len, impl=impl, cache_dtype=cdt)
+
+    def step(carry, p_l):
+        return body(carry, p_l)
+    x, self_c = _scan(step, x, params["layers"], length=cfg.n_layers)
+    cache = {"self": self_c,
+             "cross": jax.tree.map(lambda a: a.astype(cdt), cross)}
+    x = apply_norm(cfg, params["lnf"], x[:, -1:])
+    return unembed(cfg, params["embed"], x)[:, 0], cache
+
+
 # ===================================================================== loss
 def loss_fn(cfg: ArchConfig, params, batch, *, impl="auto", remat=False):
     logits, aux = forward(cfg, params, batch, impl=impl, remat=remat)
@@ -305,13 +425,21 @@ def _with_layers(axes_tree):
 
 
 def decode_step(cfg: ArchConfig, params, tokens, cache, pos):
-    """One decode step. tokens (B,1) int32; pos scalar int32.
+    """One decode step. tokens (B,1) int32; pos scalar int32 OR (B,) int32.
 
-    Returns (logits (B,1,V), new_cache).
+    Per-row ``pos`` is the slot-cache layout: every row advances at its own
+    position, so one jitted step can serve slots admitted at different times
+    (continuous batching). Returns (logits (B,1,V), new_cache).
     """
     x = embed_tokens(cfg, params["embed"], tokens)
     if cfg.family == "audio":
-        x = x + sinusoid(1, cfg.d_model, offset=pos).astype(x.dtype)[None]
+        pos_r = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                 (tokens.shape[0],))
+        d = cfg.d_model
+        i = jnp.arange(d // 2)[None, :]
+        ang = pos_r[:, None] / jnp.power(10_000.0, 2 * i / d)
+        sin = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + sin[:, None].astype(x.dtype)
 
     if cfg.family in ("dense", "vlm"):
         def body(h, xs):

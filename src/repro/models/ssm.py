@@ -153,6 +153,42 @@ def apply_ssm(cfg, p, x, *, init_state=None, return_state: bool = False):
     return y
 
 
+def apply_ssm_prefill(cfg, p, x, *, cache_dtype=None):
+    """Full-sequence layer that also emits the decode cache handoff.
+
+    Same math as `apply_ssm` (chunked SSD), but returns, alongside y, the
+    cache `apply_ssm_decode` would hold after consuming x token-by-token:
+    the final SSD state (mathematically identical to the step recurrence;
+    computed by the chunked scan) and the last CONV_WIDTH-1 *raw* xBC
+    columns (the causal-conv window, zero-padded on the left exactly like
+    the initial decode cache for prompts shorter than the conv width)."""
+    b, s, _ = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin, bmat, cmat = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    xh = xin.reshape(b, s, h, hp)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xh, dtv, a, bmat, cmat, cfg.ssm_chunk,
+                           return_state=True)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    y = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+
+    w = CONV_WIDTH - 1
+    keep = min(s, w)
+    tail = xbc_raw[:, s - keep:]
+    if keep < w:
+        tail = jnp.pad(tail, ((0, 0), (w - keep, 0), (0, 0)))
+    cache = {"conv": tail.astype(cache_dtype or x.dtype),
+             "state": final.astype(jnp.float32)}
+    return y, cache
+
+
 # --------------------------------------------------------------- decode
 def init_ssm_cache(cfg, batch: int, dtype):
     di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim

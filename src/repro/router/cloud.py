@@ -9,7 +9,10 @@ deployment, encrypted blobs).
 
 `round_batch` is the fleet-scale entry point: a jittable batched Algorithm 3
 over an (M, K) block of tenant z̃ rows with per-tenant matroid sizes, the
-cloud-side half of `router.fleet`.
+cloud-side half of `router.fleet`. Generation runs either through the
+blocking per-arm `dispatch` (the retained sequential reference) or through
+`make_scheduler`'s continuous-batching bridge (`serving.scheduler`), where
+many tenants' requests coalesce into shared per-replica decode batches.
 """
 from __future__ import annotations
 
@@ -54,11 +57,15 @@ class SchedulingCloud:
         assert len(replicas) == pcfg.k
         self.pcfg = pcfg
         self.replicas = list(replicas)
+        # the pool is immutable: pricing (and anything derived from it, like
+        # the AWC cascade order) is computed once here
+        self._prices = np.asarray([r.price_per_token for r in self.replicas])
+        self._prices.setflags(write=False)
 
     @property
     def prices(self) -> np.ndarray:
         """Per-replica pricing vector (K,) — the fleet's shared cost side."""
-        return np.asarray([r.price_per_token for r in self.replicas])
+        return self._prices
 
     def select_batch(self, z: np.ndarray, keys) -> np.ndarray:
         """Jittable batched rounding for M tenants with this cloud's pcfg."""
@@ -70,27 +77,61 @@ class SchedulingCloud:
 
     # ------------------------------------------------------------- rounding
     def select(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:
-        """Discretization rounding -> boolean action mask (K,)."""
+        """Discretization rounding -> boolean action mask (K,).
+
+        The M = 1 case routes through the same jitted `round_batch` program
+        the fleet uses (pairwise rounding + `rounding.pad_to_n_dyn`); the
+        numpy reference is retained as `select_np`."""
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        mask = self.select_batch(np.asarray(z, np.float32)[None, :],
+                                 key[None])[0]
+        return np.asarray(mask, bool)
+
+    def select_np(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        """Retained host-side numpy reference for `select`."""
         if self.pcfg.kind == "awc":
             mask = rounding.swap_round_np(z, self.pcfg.n, rng)
         else:
             mask = rounding.pairwise_round_np(z, rng)
         mask = np.asarray(mask, bool)
-        if self.pcfg.kind in ("suc", "aic") and mask.sum() < self.pcfg.n:
-            # pad to the base-matroid size with the largest-z̃ leftovers
-            left = np.argsort(-np.where(mask, -np.inf, z))
-            for i in left:
-                if mask.sum() >= self.pcfg.n:
-                    break
-                mask[i] = True
+        if self.pcfg.kind in ("suc", "aic"):
+            mask = _pad_to_n_np(mask, z, self.pcfg.n)
         return mask
 
     # ------------------------------------------------------------- dispatch
+    def realized_cost(self, arm: int, prompts: np.ndarray,
+                      out: GenResult) -> float:
+        """Statistically-based cost: realized token count x replica price."""
+        toks = prompts.shape[1] * prompts.shape[0] + int(out.out_lens.sum())
+        return toks * float(self._prices[arm])
+
     def dispatch(self, arm: int, prompts: np.ndarray, max_new: int,
                  seed: int = 0) -> tuple[GenResult, float]:
-        """Run generation on one replica; returns (result, realized cost)."""
-        rep = self.replicas[arm]
-        out = rep.engine.generate(prompts, max_new, seed=seed)
-        toks = prompts.shape[1] * prompts.shape[0] + int(out.out_lens.sum())
-        cost = toks * rep.price_per_token
-        return out, cost
+        """Run generation on one replica; returns (result, realized cost).
+
+        Blocking sequential reference — the continuous-batching path goes
+        through `make_scheduler` + `serving.scheduler.Request` submission."""
+        out = self.replicas[arm].engine.generate(prompts, max_new, seed=seed)
+        return out, self.realized_cost(arm, prompts, out)
+
+    def make_scheduler(self, *, n_slots: int = 32, chunk: int = 8,
+                       max_out: Optional[int] = None):
+        """Continuous-batching bridge over this pool: one `ReplicaRunner`
+        per replica, shared by every tenant submitting to this cloud."""
+        from repro.serving.scheduler import ContinuousScheduler, ReplicaRunner
+        return ContinuousScheduler(
+            [ReplicaRunner(r.engine, n_slots=n_slots, chunk=chunk,
+                           max_out=max_out) for r in self.replicas])
+
+
+def _pad_to_n_np(mask: np.ndarray, z: np.ndarray, n: int) -> np.ndarray:
+    """Numpy pad-to-base-matroid reference (mirrors `rounding.pad_to_n_dyn`
+    with equality semantics: largest-z̃ unselected arms fill up to n)."""
+    mask = np.asarray(mask, bool).copy()
+    if mask.sum() < n:
+        left = np.argsort(-np.where(mask, -np.inf, z))
+        for i in left:
+            if mask.sum() >= n:
+                break
+            mask[i] = True
+    return mask

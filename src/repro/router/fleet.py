@@ -238,3 +238,47 @@ def simulate_fleet(pool: Pool, cfg: FleetConfig, *, T: int,
                        action=np.asarray(act).transpose(1, 0, 2),
                        observed=np.asarray(obs).transpose(1, 0, 2),
                        state=jax.tree_util.tree_map(np.asarray, state))
+
+
+def simulate_fleet_driven(pcfgs: Sequence[PolicyConfig], cloud, data, *,
+                          T: int, prompt_len: int = 8, max_new: int = 8,
+                          n_slots: int = 32, chunk: int = 8, seed: int = 0,
+                          **service_kw) -> FleetResult:
+    """Driven-by-generation fleet rounds: real engines instead of the
+    synthetic feedback path.
+
+    Where `simulate_fleet` draws rewards/costs from a synthetic pool
+    profile inside one jitted scan, this drives M tenants through
+    `router.service.FleetService` against a live `SchedulingCloud`: every
+    round each tenant's selected arms become generation requests, the
+    shared continuous-batching scheduler coalesces them into per-replica
+    decode batches, and measured output quality / realized token costs feed
+    the same Eq.-(6) updates. Returns a `FleetResult` whose ``reward`` is
+    the mean *observed* quality per round (the synthetic path reports
+    expected set reward — the two are comparable in trend, not in value).
+    """
+    from repro.router.service import FleetService   # lazy: avoids cycle
+    fs = FleetService(list(pcfgs), cloud, data, n_slots=n_slots, chunk=chunk,
+                      seed=seed, prompt_len=prompt_len, max_new=max_new,
+                      **service_kw)
+    m, k = len(fs.tenants), pcfgs[0].k
+    reward = np.zeros((m, T))
+    cost = np.zeros((m, T))
+    action = np.zeros((m, T, k), bool)
+    observed = np.zeros((m, T, k), bool)
+    for t in range(T):
+        for i, log in enumerate(fs.step()):
+            reward[i, t] = log.rewards[log.observed].mean() \
+                if log.observed.any() else 0.0
+            cost[i, t] = log.cost
+            action[i, t] = log.action
+            observed[i, t] = log.observed
+    state = TenantState(
+        stats={key: np.concatenate([np.asarray(s.local.state.stats[key])
+                                    for s in fs.tenants])
+               for key in fs.tenants[0].local.state.stats},
+        prev_mask=np.asarray(action[:, -1], np.float32),
+        t=np.asarray([s.local.t for s in fs.tenants], np.float32),
+        key=np.zeros((m, 2), np.uint32))
+    return FleetResult(reward=reward, cost=cost, action=action,
+                       observed=observed, state=state)

@@ -4,8 +4,28 @@ round + dispatch (cloud) -> model generation -> feedback -> Eq.(6) update.
 This is the M = 1 degenerate case of the fleet architecture: the
 `LocalServer` below is a one-row `router.fleet.TenantState` wrapper, so the
 service's selection math is the same jitted batched program that advances a
-whole fleet — only the host-side engine dispatch loop is per-tenant. For
-closed-loop simulation at fleet scale use `router.fleet.simulate_fleet`.
+whole fleet — only the host-side dispatch differs. Generation runs in one
+of two modes:
+
+  sequential  — the retained blocking reference: one `cloud.dispatch` per
+                selected arm, in ascending-price order for AWC.
+  continuous  — requests go through the cloud's continuous-batching
+                scheduler (`serving.scheduler`): the round's arms are
+                submitted up front, completions come back asynchronously
+                (out of round order — App. E.3 semantics) and each one
+                applies `local.record` from its callback. The AWC cascade
+                is a state machine: only the cheapest arm is submitted
+                initially, and each below-threshold completion enqueues the
+                next-cheaper... next-pricier arm. Per-arm Eq.-(6) updates
+                touch disjoint stat entries, so the two modes end every
+                round in identical bandit state (bit-equal on
+                row-deterministic model families).
+
+`FleetService` steps M tenants against one shared scheduler, which is where
+continuous batching pays off: different tenants' requests for the same
+replica coalesce into shared decode batches. For closed-loop *synthetic*
+simulation at fleet scale use `router.fleet.simulate_fleet`; for
+generation-driven simulation see `router.fleet.simulate_fleet_driven`.
 
 The quality signal is *measured output quality*: the synthetic query stream
 is the planted-Markov LM from the data pipeline, and reward = fraction of
@@ -35,15 +55,33 @@ class RoundLog:
     cost: float                  # budget-accounted cost of the round
 
 
+@dataclasses.dataclass
+class _Round:
+    """In-flight round: per-arm results accumulate as completions arrive."""
+    prompts: np.ndarray
+    mask: np.ndarray
+    seed: int
+    rewards: np.ndarray
+    observed: np.ndarray
+    costs: np.ndarray
+    cascade: List[int]           # AWC: arms not yet submitted (price order)
+    inflight: int = 0
+
+
 class MultiLLMService:
-    """One tenant (local server) + the shared scheduling cloud, synchronous
-    by default; ``batch_size > 1`` gives the App.-E.3 asynchronous variant
-    (the cloud re-coordinates only every B feedbacks)."""
+    """One tenant (local server) + the shared scheduling cloud.
+
+    ``batch_size > 1`` gives the App.-E.3 asynchronous selection variant
+    (the cloud re-coordinates only every B feedbacks). ``dispatch`` picks
+    the generation path: "sequential", "continuous", or "auto" (continuous
+    when every replica engine exposes the slot API — stub engines fall back
+    to sequential)."""
 
     def __init__(self, pcfg: PolicyConfig, cloud: SchedulingCloud,
                  data: SyntheticLM, *, prompt_len: int = 16,
                  max_new: int = 16, batch_size: int = 1, seed: int = 0,
-                 success_threshold: float = 0.5):
+                 success_threshold: float = 0.5, dispatch: str = "auto",
+                 scheduler=None, tenant: int = 0):
         self.pcfg = pcfg
         self.local = LocalServer(pcfg)
         self.cloud = cloud
@@ -52,10 +90,25 @@ class MultiLLMService:
         self.max_new = max_new
         self.batch_size = batch_size
         self.success_threshold = success_threshold
+        self.tenant = tenant
         self.rng = np.random.default_rng(seed)
         self._round = 0
         self._cached_mask: Optional[np.ndarray] = None
         self.history: List[RoundLog] = []
+        # AWC cascade order: ascending price, fixed for the pool's lifetime
+        self._price_order = np.argsort(cloud.prices, kind="stable")
+        if dispatch == "auto":
+            dispatch = "continuous" if all(
+                hasattr(r.engine, "init_slots") for r in cloud.replicas
+            ) else "sequential"
+        if dispatch not in ("sequential", "continuous"):
+            raise ValueError(dispatch)
+        self.dispatch = dispatch
+        self.sched = None
+        self._cur: Optional[_Round] = None
+        if dispatch == "continuous":
+            self.sched = scheduler if scheduler is not None \
+                else cloud.make_scheduler()
 
     # --------------------------------------------------------------- quality
     def _quality(self, prompts: np.ndarray, gen: np.ndarray) -> float:
@@ -68,9 +121,7 @@ class MultiLLMService:
         return float(valid.mean())
 
     # ---------------------------------------------------------------- rounds
-    def step(self) -> RoundLog:
-        self._round += 1
-        k = self.pcfg.k
+    def _select_mask(self) -> np.ndarray:
         # async batching: reuse the previous action between cloud syncs
         if (self._cached_mask is None
                 or (self._round - 1) % self.batch_size == 0):
@@ -78,32 +129,97 @@ class MultiLLMService:
             self._cached_mask = self.cloud.select(z, self.rng)
         else:
             self.local.t += 1     # the round still elapses
-        mask = self._cached_mask
+        return self._cached_mask
 
-        prompts = self.data.batch(self._round)[:, :self.prompt_len]
-        rewards = np.zeros(k)
-        observed = np.zeros(k, bool)
-        cost_total = 0.0
-
-        arms = np.flatnonzero(mask)
+    def _arm_order(self, mask: np.ndarray) -> np.ndarray:
+        """Selected arms; for AWC in cascade (ascending price) order."""
         if self.pcfg.kind == "awc":
-            # cascade in ascending price order; stop at first success
-            prices = [self.cloud.replicas[a].price_per_token for a in arms]
-            arms = arms[np.argsort(prices)]
-        for arm in arms:
-            out, cost = self.cloud.dispatch(arm, prompts, self.max_new,
-                                            seed=self._round)
-            q = self._quality(prompts, out.tokens)
-            rewards[arm] = q
-            observed[arm] = True
-            cost_total += cost
+            return self._price_order[mask[self._price_order]]
+        return np.flatnonzero(mask)
+
+    def begin_round(self) -> None:
+        """Select arms and submit the round's requests (continuous mode).
+        `FleetService` calls this for every tenant before one shared drain;
+        `step` pairs it with an immediate drain."""
+        assert self._cur is None, "previous round not finished"
+        self._round += 1
+        mask = self._select_mask()
+        prompts = self.data.batch(self._round)[:, :self.prompt_len]
+        k = self.pcfg.k
+        self._cur = _Round(prompts=prompts, mask=mask, seed=self._round,
+                           rewards=np.zeros(k), observed=np.zeros(k, bool),
+                           costs=np.zeros(k),
+                           cascade=list(self._arm_order(mask)))
+        if self.pcfg.kind == "awc":
+            if self._cur.cascade:
+                self._submit(self._cur.cascade.pop(0))
+        else:
+            while self._cur.cascade:
+                self._submit(self._cur.cascade.pop(0))
+
+    def _submit(self, arm: int) -> None:
+        from repro.serving.scheduler import Request
+        self._cur.inflight += 1
+        self.sched.submit(Request(
+            tenant=self.tenant, arm=int(arm), prompts=self._cur.prompts,
+            max_new=self.max_new, seed=self._cur.seed,
+            callback=self._on_complete))
+
+    def _on_complete(self, comp) -> None:
+        """Async feedback: applied as each completion arrives, out of round
+        order across arms/tenants (per-arm Eq.-(6) updates commute)."""
+        cur = self._cur
+        arm = comp.request.arm
+        cur.inflight -= 1
+        q = self._quality(cur.prompts, comp.result.tokens)
+        cost = self.cloud.realized_cost(arm, cur.prompts, comp.result)
+        cur.rewards[arm] = q
+        cur.observed[arm] = True
+        cur.costs[arm] = cost
+        self.local.record(arm, q, cost)
+        if (self.pcfg.kind == "awc" and q < self.success_threshold
+                and cur.cascade):
+            self._submit(cur.cascade.pop(0))   # user unsatisfied: next arm
+
+    def finish_round(self) -> RoundLog:
+        cur = self._cur
+        assert cur is not None and cur.inflight == 0
+        # fixed-order cost sum: identical float result in both modes
+        log = RoundLog(cur.mask.copy(), cur.observed, cur.rewards,
+                       float(cur.costs.sum()))
+        self.history.append(log)
+        self._cur = None
+        return log
+
+    def _step_sequential(self) -> RoundLog:
+        cur = self._cur
+        for arm in list(cur.cascade):
+            cur.cascade.remove(arm)
+            out, cost = self.cloud.dispatch(arm, cur.prompts, self.max_new,
+                                            seed=cur.seed)
+            q = self._quality(cur.prompts, out.tokens)
+            cur.rewards[arm] = q
+            cur.observed[arm] = True
+            cur.costs[arm] = cost
             self.local.record(arm, q, cost)
             if self.pcfg.kind == "awc" and q >= self.success_threshold:
                 break            # user satisfied — later arms unqueried
+        return self.finish_round()
 
-        log = RoundLog(mask.copy(), observed, rewards, cost_total)
-        self.history.append(log)
-        return log
+    def step(self) -> RoundLog:
+        if self.dispatch == "sequential":
+            self._round += 1
+            mask = self._select_mask()
+            prompts = self.data.batch(self._round)[:, :self.prompt_len]
+            k = self.pcfg.k
+            self._cur = _Round(prompts=prompts, mask=mask, seed=self._round,
+                               rewards=np.zeros(k),
+                               observed=np.zeros(k, bool), costs=np.zeros(k),
+                               cascade=list(self._arm_order(mask)))
+            return self._step_sequential()
+        self.begin_round()
+        self.sched.drain()
+        return self.finish_round()
 
     def run(self, rounds: int) -> List[RoundLog]:
         return [self.step() for _ in range(rounds)]
@@ -120,3 +236,36 @@ class MultiLLMService:
                 "mean_cost": float(costs.mean()),
                 "violation": float(viol[-1]),
                 "mean_observed_reward": float(obs_rewards.mean())}
+
+
+class FleetService:
+    """M tenants sharing one cloud + one continuous-batching scheduler.
+
+    Each round every tenant submits its selected arms' requests up front;
+    one shared drain then coalesces all tenants' generation into per-replica
+    decode batches, with each completion applying its tenant's bandit
+    feedback from the callback (including AWC cascade resubmissions, which
+    land mid-drain and keep the pipeline full)."""
+
+    def __init__(self, pcfg_or_list, cloud: SchedulingCloud,
+                 data: SyntheticLM, *, n_tenants: Optional[int] = None,
+                 n_slots: int = 32, chunk: int = 8, seed: int = 0,
+                 **service_kw):
+        pcfgs = list(pcfg_or_list) if isinstance(pcfg_or_list, (list, tuple)) \
+            else [pcfg_or_list] * int(n_tenants or 1)
+        self.cloud = cloud
+        self.sched = cloud.make_scheduler(n_slots=n_slots, chunk=chunk)
+        self.tenants = [
+            MultiLLMService(p, cloud, data, dispatch="continuous",
+                            scheduler=self.sched, tenant=i, seed=seed + i,
+                            **service_kw)
+            for i, p in enumerate(pcfgs)]
+
+    def step(self) -> List[RoundLog]:
+        for svc in self.tenants:
+            svc.begin_round()
+        self.sched.drain()
+        return [svc.finish_round() for svc in self.tenants]
+
+    def run(self, rounds: int) -> List[List[RoundLog]]:
+        return [self.step() for _ in range(rounds)]

@@ -1,0 +1,185 @@
+"""Continuous-batching request bridge (paper App. E.3 serving loop).
+
+Tenants submit `(tenant, arm, prompts)` requests; each replica has a
+`ReplicaRunner` owning one `Engine` + one persistent `SlotState`:
+
+  submit -> FIFO pending queue
+  step   -> admit as many whole requests as free slots allow, coalescing
+            same-prompt-length requests into one stacked prefill bucket
+            written straight into free slots, then one jitted
+            `decode_chunk` advancing every occupied slot, then harvest
+            completed requests off the device.
+
+`ContinuousScheduler` round-robins the runners until idle; completions fire
+their request's callback *inside* the drain loop, so a callback may submit
+follow-up requests (the AWC cascade: the next-cheaper arm is enqueued only
+when a completion comes back below the success threshold) and the drain
+keeps going until the whole cascade settles. Feedback therefore lands out
+of round order — exactly the asynchronous semantics the bandit's per-arm
+Eq.-(6) updates commute under.
+
+Requests are admitted whole (all rows together) so each request's prefill
+is the same (B, S) computation the sequential reference runs — that, plus
+the per-row sampling keys, is what makes continuous output bit-equal to
+`Engine.generate` per request on row-deterministic model families.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import Engine, GenResult, SlotState, _row_keys
+
+_RID = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: a tenant's round for one arm."""
+    tenant: int
+    arm: int
+    prompts: np.ndarray               # (B, S) int32
+    max_new: int
+    seed: int
+    callback: Optional[Callable[["Completion"], None]] = None
+    rid: int = dataclasses.field(default_factory=lambda: next(_RID))
+
+
+@dataclasses.dataclass
+class Completion:
+    request: Request
+    result: GenResult
+
+
+class ReplicaRunner:
+    """One replica: engine + slot state + FIFO pending queue."""
+
+    def __init__(self, engine: Engine, *, n_slots: int = 32, chunk: int = 8,
+                 max_out: Optional[int] = None):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.state: SlotState = engine.init_slots(n_slots, max_out=max_out)
+        self.pending: Deque[Request] = deque()
+        self.resident: Dict[int, Tuple[Request, np.ndarray]] = {}
+        self._free: List[int] = list(range(n_slots))
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending or self.resident)
+
+    def submit(self, req: Request) -> None:
+        if req.prompts.shape[0] > self.n_slots:
+            raise ValueError(f"request batch {req.prompts.shape[0]} exceeds "
+                             f"slot count {self.n_slots}")
+        self.pending.append(req)
+
+    def _admit_ready(self) -> None:
+        """Admit the FIFO prefix of pending requests that fits in the free
+        slots as ONE prefill bucket: same-prompt-length requests are stacked
+        into a single (ΣB, S) prefill + admit call. Per-request rows keep
+        their own fold_in(PRNGKey(seed), row) sampling keys and per-slot
+        token budgets, so bucketing changes batching, not sampled tokens.
+        (Buckets mixing different request sizes can shift XLA's matmul
+        tiling and drift logits ~1e-7 vs the request-alone reference —
+        uniform-size buckets, the fleet case, stay bit-equal.)"""
+        while self.pending:
+            s = self.pending[0].prompts.shape[1]
+            bucket: List[Request] = []
+            rows = 0
+            while self.pending and self.pending[0].prompts.shape[1] == s \
+                    and len(self._free) - rows >= \
+                    self.pending[0].prompts.shape[0]:
+                req = self.pending.popleft()
+                rows += req.prompts.shape[0]
+                bucket.append(req)
+            if not bucket:
+                return               # head request doesn't fit yet
+            slots = np.asarray([self._free.pop() for _ in range(rows)])
+            lg, cache_slice = self.engine.prefill(
+                np.concatenate([r.prompts for r in bucket], axis=0))
+            rkeys = jnp.concatenate([
+                _row_keys(jax.random.PRNGKey(r.seed), r.prompts.shape[0])
+                for r in bucket])
+            max_new = np.concatenate([
+                np.full(r.prompts.shape[0], r.max_new, np.int32)
+                for r in bucket])
+            self.state = self.engine.admit(
+                self.state, slots, lg, cache_slice, prompt_len=s,
+                max_new=max_new, rkeys=rkeys)
+            ofs = 0
+            for req in bucket:
+                b = req.prompts.shape[0]
+                self.resident[req.rid] = (req, slots[ofs:ofs + b])
+                ofs += b
+
+    def _harvest(self) -> List[Completion]:
+        if not self.resident:
+            return []
+        step = np.asarray(self.state.step)
+        fin = np.asarray(self.state.finished)
+        cap = np.asarray(self.state.max_new)
+        done = [rid for rid, (_, slots) in self.resident.items()
+                if (fin[slots] | (step[slots] >= cap[slots])).all()]
+        if not done:
+            return []
+        out = np.asarray(self.state.out)
+        n_out = np.asarray(self.state.n_out)
+        lp = np.asarray(self.state.lp_sum)
+        comps = []
+        freed: List[int] = []
+        for rid in done:
+            req, slots = self.resident.pop(rid)
+            n = n_out[slots]
+            res = GenResult(out[slots, :req.max_new], n,
+                            lp[slots] / np.maximum(n, 1))
+            freed.extend(slots.tolist())
+            comps.append(Completion(req, res))
+        self.state = self.engine.release(self.state, np.asarray(freed))
+        self._free.extend(freed)
+        return comps
+
+    def step(self) -> List[Completion]:
+        """One scheduling tick: admit, decode one chunk, harvest."""
+        self._admit_ready()
+        if self.resident:
+            self.state = self.engine.decode_chunk(self.state, self.chunk)
+        return self._harvest()
+
+
+class ContinuousScheduler:
+    """Per-arm runners + the drain loop that settles all queued work."""
+
+    def __init__(self, runners: Sequence[ReplicaRunner],
+                 on_complete: Optional[Callable[[Completion], None]] = None):
+        self.runners = list(runners)
+        self.on_complete = on_complete
+
+    @property
+    def busy(self) -> bool:
+        return any(r.busy for r in self.runners)
+
+    def submit(self, req: Request) -> int:
+        self.runners[req.arm].submit(req)
+        return req.rid
+
+    def drain(self) -> List[Completion]:
+        """Run until every runner is idle; fire callbacks as completions
+        arrive (callbacks may submit follow-up requests — the cascade)."""
+        all_comps: List[Completion] = []
+        while self.busy:
+            for runner in self.runners:
+                if not runner.busy:
+                    continue
+                for comp in runner.step():
+                    cb = comp.request.callback or self.on_complete
+                    if cb is not None:
+                        cb(comp)
+                    all_comps.append(comp)
+        return all_comps
