@@ -24,14 +24,24 @@ rounding + sort-free cascade).
 
 `--awc-sweep` adds an AWC-only (N, K) sweep row set (matroid size × pool
 slice) to the emitted trajectory. `--baseline PATH` diffs every matching
-(workload, tenants, n, k) grid-engine cell against a previously committed
-BENCH_fleet.json and exits non-zero when any cell regresses by more than
-`--max-regression` (default 20%) — wired into CI as a soft gate (warn,
-don't fail: the 2-core shared runner swings more than real regressions).
+(workload, tenants, n, k, devices) grid-engine cell against a previously
+committed BENCH_fleet.json and exits non-zero when any cell regresses by
+more than `--max-regression` (default 20%) — wired into CI as a soft gate
+(warn, don't fail: the 2-core shared runner swings more than real
+regressions).
+
+`--devices 1 2 8` adds a pod-scale sharded-fleet row set: each device
+count runs in a fresh subprocess under
+`--xla_force_host_platform_device_count=N` (the count locks at jax init)
+and times `simulate_fleet(mesh=make_fleet_mesh())` at `--devices-tenants`
+tenants (default 4096). Rows carry a `devices` column plus the worker's
+`host_cores` — virtual CPU devices only parallelize up to the physical
+core count, so scaling numbers are only meaningful when cores ≥ devices.
 
   PYTHONPATH=src python benchmarks/fleet_throughput.py \
       [--tenants 1 4 16 64] [--rounds 256] [--kind suc] [--mixed] \
       [--workloads suc awc mixed] [--reps 3] [--awc-sweep] [--smoke] \
+      [--devices 1 2 8] [--devices-tenants 4096] [--devices-rounds 32] \
       [--baseline BENCH_fleet.json] [--max-regression 0.2] [--json PATH]
 """
 import os
@@ -42,6 +52,7 @@ import argparse
 import functools
 import json
 import subprocess
+import sys
 import time
 
 import jax
@@ -169,12 +180,72 @@ def bench_engines_cfg(pool, cfg, m, T, reps):
     return best
 
 
+def run_device_worker(n, args):
+    """Subprocess body for one --devices cell: this process was spawned
+    with N forced host devices; time the sharded fleet scan and emit one
+    JSON row on stdout for the parent to collect."""
+    from repro.env.llm_profiles import paper_pool
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.router import fleet
+    assert jax.device_count() == n, (jax.device_count(), n)
+    pool = paper_pool("sciq")
+    m, T = args.tenants[0], args.rounds
+    wl = (args.workloads or ["awc"])[0]
+    cfg = make_fleet_cfg(pool, make_kinds(wl, m), T)
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    mesh = make_fleet_mesh() if n > 1 else None   # N=1: reference path
+    axes = fleet.fleet_mesh_axes(m, mesh)
+    fleet.simulate_fleet(pool, cfg, T=T, keys=keys, mesh=mesh)   # compile
+    best = 0.0
+    for _ in range(args.reps):
+        t0 = time.perf_counter()
+        fleet.simulate_fleet(pool, cfg, T=T, keys=keys, mesh=mesh)
+        best = max(best, m * T / (time.perf_counter() - t0))
+    print("DEVICE_ROW " + json.dumps(
+        {"tenants": m, "workload": wl, "devices": n,
+         "tenant_axes": list(axes) if axes else None,
+         "host_cores": os.cpu_count(),
+         "engine_rps": {"grid": round(best, 1)}}))
+
+
+def bench_devices(args):
+    """The --devices sweep: one subprocess per device count (XLA locks the
+    host device count at first jax init, so each N needs a fresh process)."""
+    rows = []
+    here = os.path.abspath(__file__)
+    for wl in args.workloads or ["awc"]:
+        for n in args.devices:
+            env = dict(os.environ)
+            flags = [f for f in env.get("XLA_FLAGS", "").split()
+                     if not f.startswith(
+                         "--xla_force_host_platform_device_count")]
+            env["XLA_FLAGS"] = " ".join(
+                flags + [f"--xla_force_host_platform_device_count={n}"])
+            cmd = [sys.executable, here, "--_device-worker", str(n),
+                   "--tenants", str(args.devices_tenants),
+                   "--rounds", str(args.devices_rounds),
+                   "--workloads", wl, "--reps", str(args.reps)]
+            out = subprocess.run(cmd, env=env, capture_output=True,
+                                 text=True)
+            if out.returncode != 0:
+                raise RuntimeError(f"device worker N={n} failed:\n"
+                                   f"{out.stderr[-2000:]}")
+            row = next(json.loads(line[len("DEVICE_ROW "):])
+                       for line in out.stdout.splitlines()
+                       if line.startswith("DEVICE_ROW "))
+            rows.append(row)
+            print(f"{row['tenants']},{args.devices_rounds},{wl}"
+                  f"[devices={n}],{row['engine_rps']['grid']:.1f},,")
+    return rows
+
+
 def diff_baseline(results, base, max_regression):
     """Soft regression gate: compare grid-engine rounds/sec against a
     committed BENCH_fleet.json cell-by-cell. Returns the number of cells
     regressing by more than ``max_regression`` (fraction)."""
     def cell_key(row):
-        return (row["workload"], row["tenants"], row.get("n"), row.get("k"))
+        return (row["workload"], row["tenants"], row.get("n"), row.get("k"),
+                row.get("devices"))
 
     base_cells = {cell_key(r): r["engine_rps"]["grid"]
                   for r in base.get("results", [])}
@@ -230,6 +301,14 @@ def main(argv=None):
                     help="also time the per-call and unbatched host loops")
     ap.add_argument("--awc-sweep", action="store_true",
                     help="add the AWC-only (N, K) sweep row set")
+    ap.add_argument("--devices", type=int, nargs="+", default=None,
+                    help="sharded-fleet device sweep (subprocess per count)")
+    ap.add_argument("--devices-tenants", type=int, default=4096,
+                    help="fleet size M for the --devices sweep")
+    ap.add_argument("--devices-rounds", type=int, default=32,
+                    help="rounds T for the --devices sweep")
+    ap.add_argument("--_device-worker", type=int, default=None,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--baseline", default=None,
                     help="diff grid rounds/sec against a committed "
                          "BENCH_fleet.json; exit non-zero on regression")
@@ -240,6 +319,10 @@ def main(argv=None):
     ap.add_argument("--json", default=None,
                     help="output path (default: BENCH_fleet.json here)")
     args = ap.parse_args(argv)
+
+    if getattr(args, "_device_worker") is not None:
+        run_device_worker(getattr(args, "_device_worker"), args)
+        return
 
     from repro.env.llm_profiles import paper_pool
     if args.smoke:
@@ -282,6 +365,10 @@ def main(argv=None):
         sweep_m = 16 if args.smoke else max(args.tenants)
         out["results"].extend(
             bench_awc_sweep(pool, args.rounds, args.reps, sweep_m))
+
+    if args.devices:
+        out["host_cores"] = os.cpu_count()
+        out["results"].extend(bench_devices(args))
 
     path = args.json or os.path.join(os.path.dirname(
         os.path.abspath(__file__)), "..", "BENCH_fleet.json")

@@ -2,7 +2,11 @@
 
 Layout: <dir>/<step>/manifest.msgpack  (treedef, shapes, dtypes)
         <dir>/<step>/arrays.bin        (concatenated C-order buffers)
-Atomic via tmp-dir rename; keeps the newest ``keep`` checkpoints.
+Atomic via tmp-dir rename; keeps the newest ``keep`` checkpoints and sweeps
+stale ``.tmp-*`` dirs left behind by crashed saves. Restore is strict: the
+manifest must describe exactly the leaves of ``like`` (count, shape, dtype)
+and every buffer must be read in full — a truncated or mismatched checkpoint
+raises instead of silently handing back partial state.
 """
 from __future__ import annotations
 
@@ -26,12 +30,19 @@ def _paths(tree):
                      for k in path) for path, _ in flat]
 
 
+def _leaf_dtype(leaf) -> np.dtype:
+    dt = getattr(leaf, "dtype", None)
+    return np.dtype(dt) if dt is not None else np.asarray(leaf).dtype
+
+
 def save(directory: str, step: int, tree, keep: int = 3) -> str:
     leaves, _ = _flatten(tree)
     names = _paths(tree)
     tmp = os.path.join(directory, f".tmp-{step}")
     final = os.path.join(directory, str(step))
-    os.makedirs(tmp, exist_ok=True)
+    if os.path.isdir(tmp):          # leftover from a crashed save of this step
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     manifest = []
     with open(os.path.join(tmp, "arrays.bin"), "wb") as f:
         for name, leaf in zip(names, leaves):
@@ -56,14 +67,32 @@ def restore(directory: str, like, step: Optional[int] = None):
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
     leaves, treedef = _flatten(like)
+    metas = manifest["arrays"]
+    if len(metas) != len(leaves):
+        raise ValueError(
+            f"checkpoint step {step} holds {len(metas)} arrays but the "
+            f"restore target has {len(leaves)} leaves — treedef mismatch "
+            f"(zip would silently truncate)")
     out = []
     with open(os.path.join(path, "arrays.bin"), "rb") as f:
-        for meta, leaf in zip(manifest["arrays"], leaves):
+        for meta, leaf in zip(metas, leaves):
             buf = f.read(meta["nbytes"])
-            arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])
+            if len(buf) != meta["nbytes"]:
+                raise ValueError(
+                    f"truncated checkpoint: {meta['name']} expected "
+                    f"{meta['nbytes']} bytes, got {len(buf)}")
+            got_dtype = np.dtype(meta["dtype"])
+            want_dtype = _leaf_dtype(leaf)
+            if got_dtype != want_dtype:
+                raise ValueError(
+                    f"dtype mismatch for {meta['name']}: checkpoint holds "
+                    f"{got_dtype}, restore target expects {want_dtype}")
+            arr = np.frombuffer(buf, dtype=got_dtype
                                 ).reshape(meta["shape"]).copy()
-            assert tuple(arr.shape) == tuple(np.shape(leaf)), (
-                meta["name"], arr.shape, np.shape(leaf))
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(
+                    f"shape mismatch for {meta['name']}: checkpoint holds "
+                    f"{arr.shape}, restore target expects {np.shape(leaf)}")
             out.append(arr)
     return jax.tree.unflatten(treedef, out), step
 
@@ -79,3 +108,6 @@ def _gc(directory: str, keep: int):
     steps = sorted(int(d) for d in os.listdir(directory) if d.isdigit())
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, str(s)), ignore_errors=True)
+    for d in os.listdir(directory):     # crashed saves leak .tmp-<step> dirs
+        if d.startswith(".tmp-"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

@@ -21,9 +21,11 @@ def init_stats(k: int) -> Dict[str, jnp.ndarray]:
 
 def init_stats_batch(m: int, k: int) -> Dict[str, jnp.ndarray]:
     """Fleet layout: one row of Eq.-(6) statistics per tenant. Every update
-    in this module is elementwise, so (M, K) arrays flow through unchanged."""
-    z = jnp.zeros((m, k), jnp.float32)
-    return {"mu_hat": z, "c_hat": z, "t_mu": z, "t_c": z}
+    in this module is elementwise, so (M, K) arrays flow through unchanged.
+    Distinct buffers per entry: the fleet scan donates its TenantState, and
+    aliased leaves would be the same buffer donated four times."""
+    return {name: jnp.zeros((m, k), jnp.float32)
+            for name in ("mu_hat", "c_hat", "t_mu", "t_c")}
 
 
 def radius(t, t_k, k: int, delta):

@@ -1,11 +1,13 @@
 import os
 if __name__ == "__main__":
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede any jax import: jax locks the device count on first init.
-# Guarded to the CLI entry point: importers (tests, perf_probe) only want
-# the pure helpers and must not have their process flipped onto a
-# 512-virtual-device host platform (XLA retiles matmuls there, breaking
-# the suite's single-device bitwise pins; see tests/conftest.py).
+    from repro.launch.hostdev import force_host_device_count
+    force_host_device_count(512)
+# ^ MUST precede any jax import: jax locks the device count on first init
+# (enforced by hostdev). Guarded to the CLI entry point: importers (tests,
+# perf_probe) only want the pure helpers and must not have their process
+# flipped onto a 512-virtual-device host platform (XLA retiles matmuls
+# there, breaking the suite's single-device bitwise pins; see
+# tests/conftest.py).
 """Multi-pod dry-run: prove every (architecture x input shape x mesh)
 combination lowers, SPMD-partitions, and compiles on the production meshes
 (16x16 = 256 chips single-pod; 2x16x16 = 512 chips multi-pod) — with no

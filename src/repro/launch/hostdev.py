@@ -1,0 +1,26 @@
+"""Force XLA's host-platform virtual device count — BEFORE any jax import.
+
+jax locks the device count on first init, so every entry point that wants
+an N-virtual-device CPU mesh (the dry-run's 512, the fleet-mesh smoke's
+--devices, the benchmark device sweeps) must set XLA_FLAGS first. This
+module deliberately imports nothing heavier than os/sys so it can run at
+the very top of a __main__ guard.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_device_count(n: int) -> None:
+    """Set (or replace) the forced host device count in XLA_FLAGS."""
+    if "jax" in sys.modules:
+        raise RuntimeError(
+            "force_host_device_count must run before the first jax import "
+            "— the device count is locked at jax init")
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith(_FLAG)]
+    flags.append(f"{_FLAG}={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)

@@ -1,9 +1,27 @@
-"""Production meshes (TPU v5e numbers).
+"""Production meshes (TPU v5e numbers) + the fleet tenant mesh.
 
-A function, not a module constant, so importing this module never touches
-jax device state; the dry-run sets XLA_FLAGS before any jax import.
+Mesh builders are functions, not module constants, so importing this module
+never touches jax device state; CLI entry points set XLA_FLAGS before any
+jax import (see `repro.launch.hostdev`).
+
+Run as a module this is the real-mesh fleet smoke: it builds an N-device
+`(pod, data)` mesh (forcing N virtual host devices when --devices is
+given), advances a small fleet through the sharded scan, and verifies the
+trajectory bit-for-bit against the single-device reference:
+
+  PYTHONPATH=src python -m repro.launch.mesh --devices 8 --tenants 64 \
+      --rounds 32 [--pods 2] [--workload mixed] [--ckpt-dir DIR]
 """
 from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__" and "--devices" in sys.argv:
+    # must precede the jax import below: the device count locks at init
+    from repro.launch.hostdev import force_host_device_count
+    force_host_device_count(int(sys.argv[sys.argv.index("--devices") + 1]))
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 
@@ -25,5 +43,94 @@ def make_cpu_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_fleet_mesh(n_devices: int = 0, *, pods: int = 1):
+    """Tenant mesh for the sharded fleet scan (router.fleet): all devices
+    on the `(pod, data)` axes the "tenants" logical axis shards over."""
+    n = n_devices or len(jax.devices())
+    if pods > 1:
+        if n % pods:
+            raise ValueError(f"{n} devices don't split into {pods} pods")
+        return jax.make_mesh((pods, n // pods), ("pod", "data"))
+    return jax.make_mesh((n,), ("data",))
+
+
 def n_chips(mesh) -> int:
     return mesh.devices.size
+
+
+# ============================================================ fleet smoke
+def fleet_smoke(n_devices: int, tenants: int, rounds: int, *, pods: int = 1,
+                workload: str = "mixed", ckpt_dir=None, ckpt_every: int = 0,
+                seed: int = 0) -> dict:
+    """Sharded fleet run on a real mesh, verified against the single-device
+    reference. Returns a summary record (printed as JSON by the CLI)."""
+    import time
+
+    import numpy as np
+
+    from repro.core.policies import PolicyConfig
+    from repro.env.llm_profiles import default_rho, paper_pool
+    from repro.router import fleet
+
+    pool = paper_pool("sciq")
+    kinds = [("awc", "suc", "aic")[i % 3] for i in range(tenants)] \
+        if workload == "mixed" else [workload] * tenants
+    pcfgs = [PolicyConfig(kind=k, k=pool.k, n=4,
+                          rho=default_rho(pool, k, 4), delta=1.0 / rounds)
+             for k in kinds]
+    cfg = fleet.fleet_config(pcfgs)
+    keys = jax.random.split(jax.random.PRNGKey(seed), tenants)
+    mesh = make_fleet_mesh(n_devices, pods=pods)
+    axes = fleet.fleet_mesh_axes(tenants, mesh)
+
+    t0 = time.perf_counter()
+    sharded = fleet.simulate_fleet(pool, cfg, T=rounds, keys=keys, mesh=mesh,
+                                   ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+    dt_sharded = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = fleet.simulate_fleet(pool, cfg, T=rounds, keys=keys)
+    dt_single = time.perf_counter() - t0
+
+    bit_equal = (
+        np.array_equal(sharded.action, ref.action[:, sharded.t0:])
+        and np.array_equal(sharded.observed, ref.observed[:, sharded.t0:])
+        and np.array_equal(sharded.cost, ref.cost[:, sharded.t0:])
+        and all(np.array_equal(sharded.state.stats[n], ref.state.stats[n])
+                for n in ref.state.stats)
+        and np.array_equal(sharded.state.key, ref.state.key))
+    return {"devices": n_chips(mesh), "pods": pods, "tenants": tenants,
+            "rounds": rounds, "workload": workload,
+            "tenant_axes": list(axes) if axes else None,
+            "sharded": axes is not None, "bit_equal": bool(bit_equal),
+            "rps_sharded": round(tenants * rounds / dt_sharded, 1),
+            "rps_single": round(tenants * rounds / dt_single, 1)}
+
+
+def _main(argv=None):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description="real-mesh fleet smoke")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N virtual host devices (0 = use existing)")
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--tenants", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=32)
+    ap.add_argument("--workload", default="mixed",
+                    choices=["awc", "suc", "aic", "mixed"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    rec = fleet_smoke(args.devices, args.tenants, args.rounds,
+                      pods=args.pods, workload=args.workload,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      seed=args.seed)
+    print(json.dumps(rec))
+    if not rec["bit_equal"]:
+        raise SystemExit("sharded fleet diverged from the single-device "
+                         "reference")
+
+
+if __name__ == "__main__":
+    _main()

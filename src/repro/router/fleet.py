@@ -14,6 +14,24 @@ all vmapped across tenants, and `simulate_fleet` runs T rounds × M tenants
 inside a single jitted lax.scan. `core.bandit.simulate("c2mabv")`
 (seeds-as-tenants) and `router.local_server.LocalServer` (M = 1) are thin
 wrappers over this path.
+
+Pod scale: the tenant axis carries the logical name "tenants"
+(`TENANT_STATE_AXES` / `FLEET_CONFIG_AXES`), which `sharding.RULES` maps
+onto the `(pod, data)` mesh axes with the usual divisibility fallback.
+`simulate_fleet(mesh=...)` lowers the same scan through `shard_map` —
+each device advances its M/ndev tenant rows with the identical per-row
+program (no collectives: tenants only share the read-only pool profile),
+so the sharded run is bit-identical to the single-device reference, which
+is retained as the `mesh=None` path (same discipline as engine="bisect").
+When M doesn't divide the tenant mesh axes, `fleet_mesh_axes` returns
+None and the single-device path runs — the documented fallback.
+
+Preemption: `simulate_fleet(ckpt_dir=..., ckpt_every=...)` splits the scan
+at multiples of ``ckpt_every`` and persists `TenantState` through
+`ckpt.checkpoint` (the checkpoint *step* is the round counter). Restart
+with the same arguments resumes from the newest checkpoint and — because
+segment boundaries align to the same multiples — replays the identical
+compiled segments, reproducing the uninterrupted trajectory bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,7 +42,10 @@ from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import sharding
+from repro.ckpt import checkpoint as ckpt
 from repro.core import confidence as cb
 from repro.core import relax
 from repro.core import rewards as R
@@ -59,6 +80,37 @@ class TenantState(NamedTuple):
     key: jnp.ndarray                # (M, 2) uint32 per-tenant PRNG keys
 
 
+# Logical-axis annotations (sharding.RULES maps "tenants" -> (pod, data)).
+TENANT_STATE_AXES = TenantState(
+    stats={k: ("tenants", None) for k in ("mu_hat", "c_hat", "t_mu", "t_c")},
+    prev_mask=("tenants", None), t=("tenants",), key=("tenants", None))
+FLEET_CONFIG_AXES = FleetConfig(*((("tenants",),) * len(FleetConfig._fields)))
+
+_AXES_LEAF = (lambda a: isinstance(a, tuple)
+              and all(isinstance(e, (str, type(None))) for e in a))
+
+
+def _axes_to_specs(tree_axes, axes: Tuple[str, ...]):
+    """Logical-axes pytree -> PartitionSpec pytree, tenant dim on ``axes``."""
+    return jax.tree.map(
+        lambda ax: P(*[axes if name == "tenants" else None for name in ax]),
+        tree_axes, is_leaf=_AXES_LEAF)
+
+
+def fleet_mesh_axes(m: int, mesh: Optional[Mesh]) -> Optional[Tuple[str, ...]]:
+    """The mesh axes the tenant dim shards over, or None when `spec_for`'s
+    divisibility fallback leaves it replicated (M not divisible by the
+    tenant mesh axes, or no data/pod axis) — callers then take the
+    single-device reference path."""
+    if mesh is None:
+        return None
+    spec = sharding.spec_for((m,), ("tenants",), mesh)
+    if not spec:
+        return None
+    ax = spec[0]
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
 def fleet_config(pcfgs: Sequence[PolicyConfig],
                  sync_every=1) -> FleetConfig:
     """Pack per-tenant PolicyConfigs into the flat fleet layout.
@@ -89,10 +141,12 @@ def init_tenant_state(m: int, k: int,
                       seed: int = 0) -> TenantState:
     if keys is None:
         keys = jax.random.split(jax.random.PRNGKey(seed), m)
+    # copy (not view) the caller's keys: the scan donates TenantState
+    # buffers, which must never invalidate an array the caller still holds
     return TenantState(stats=cb.init_stats_batch(m, k),
                        prev_mask=jnp.zeros((m, k), jnp.float32),
                        t=jnp.zeros((m,), jnp.float32),
-                       key=jnp.asarray(keys))
+                       key=jnp.array(keys, jnp.uint32))
 
 
 # ================================================================= per-tenant
@@ -154,22 +208,71 @@ def _tenant_step(row: TenantState, t, mu, mean_cost, levels,
 
 
 # ================================================================== fleet run
-@functools.partial(jax.jit,
-                   static_argnames=("T", "levels", "unroll", "kinds_present",
-                                    "engine", "fw_steps"))
-def _scan_fleet(state0: TenantState, cfg: FleetConfig, mu, mean_cost,
-                T: int, levels: Tuple[float, ...], unroll: int,
-                kinds_present: Tuple[int, ...],
-                engine: Optional[str] = None,
-                fw_steps: Optional[int] = None):
+def _scan_fleet_impl(state0: TenantState, cfg: FleetConfig, mu, mean_cost,
+                     t0, T: int, levels: Tuple[float, ...], unroll: int,
+                     kinds_present: Tuple[int, ...],
+                     engine: Optional[str] = None,
+                     fw_steps: Optional[int] = None):
+    """Rounds t0+1 .. t0+T for every tenant row present in ``state0``.
+
+    This is the single trace both lowerings share: `_scan_fleet` jits it
+    whole-fleet on one device; `_scan_fleet_sharded` runs it per-shard
+    under shard_map (tenant rows are independent, so the per-row program —
+    and hence every bit of the trajectory — is identical either way)."""
     def scan_step(state, t):
         return jax.vmap(
             lambda row, c: _tenant_step(row, t, mu, mean_cost, levels, c,
                                         kinds_present, engine, fw_steps)
         )(state, cfg)
 
-    return jax.lax.scan(scan_step, state0, jnp.arange(1, T + 1),
+    return jax.lax.scan(scan_step, state0, t0 + jnp.arange(1, T + 1),
                         unroll=unroll)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("T", "levels", "unroll", "kinds_present",
+                                    "engine", "fw_steps"),
+                   donate_argnums=(0,))
+def _scan_fleet(state0: TenantState, cfg: FleetConfig, mu, mean_cost, t0,
+                T: int, levels: Tuple[float, ...], unroll: int,
+                kinds_present: Tuple[int, ...],
+                engine: Optional[str] = None,
+                fw_steps: Optional[int] = None):
+    return _scan_fleet_impl(state0, cfg, mu, mean_cost, t0, T, levels,
+                            unroll, kinds_present, engine, fw_steps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("T", "levels", "unroll", "kinds_present",
+                                    "engine", "fw_steps", "mesh", "axes"),
+                   donate_argnums=(0,))
+def _scan_fleet_sharded(state0: TenantState, cfg: FleetConfig, mu, mean_cost,
+                        t0, T: int, levels: Tuple[float, ...], unroll: int,
+                        kinds_present: Tuple[int, ...],
+                        engine: Optional[str], fw_steps: Optional[int],
+                        mesh: Mesh, axes: Tuple[str, ...]):
+    """`_scan_fleet_impl` under shard_map: tenant rows split over ``axes``
+    (the `(pod, data)` tenant mesh axes), pool profile replicated, no
+    collectives. TenantState is donated so the carry stays in place on
+    each device across scan steps and segments."""
+    state_spec = _axes_to_specs(TENANT_STATE_AXES, axes)
+    cfg_spec = _axes_to_specs(FLEET_CONFIG_AXES, axes)
+    rowp, matp = P(None, axes), P(None, axes, None)
+
+    def body(state0, cfg, mu, mean_cost, t0):
+        return _scan_fleet_impl(state0, cfg, mu, mean_cost, t0, T, levels,
+                                unroll, kinds_present, engine, fw_steps)
+
+    in_specs = (state_spec, cfg_spec, P(), P(), P())
+    out_specs = (state_spec, (rowp, rowp, matp, matp))
+    if hasattr(jax, "shard_map"):           # jax >= 0.5 top-level spelling
+        smap = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    else:                                   # 0.4.x: experimental, check_rep
+        from jax.experimental.shard_map import shard_map
+        smap = shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    return smap(state0, cfg, mu, mean_cost, t0)
 
 
 def _kinds_present(cfg: FleetConfig) -> Tuple[int, ...]:
@@ -211,13 +314,31 @@ class FleetResult:
     action: np.ndarray     # (M, T, K) dispatched masks
     observed: np.ndarray   # (M, T, K) feedback masks
     state: TenantState     # final fleet state (stats/t/keys)
+    t0: int = 0            # first round is t0+1 (resumed runs: > 0)
+
+
+def _ckpt_bounds(t0: int, T: int, ckpt_every: int) -> list:
+    """Segment boundaries [t0, ..., T]: every interior boundary is a
+    multiple of ``ckpt_every``, so a resumed run replays the *same*
+    segment lengths an uninterrupted run compiles — the bit-identical
+    resume guarantee rests on this alignment."""
+    bounds = [t0]
+    if ckpt_every > 0:
+        bounds += list(range((t0 // ckpt_every + 1) * ckpt_every, T + 1,
+                             ckpt_every))
+    if bounds[-1] != T:
+        bounds.append(T)
+    return bounds
 
 
 def simulate_fleet(pool: Pool, cfg: FleetConfig, *, T: int,
                    keys: Optional[jnp.ndarray] = None, seed: int = 0,
                    unroll: int = 1,
                    engine: Optional[str] = None,
-                   fw_steps: Optional[int] = None) -> FleetResult:
+                   fw_steps: Optional[int] = None,
+                   mesh: Optional[Mesh] = None,
+                   ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                   resume: bool = True) -> FleetResult:
     """Advance M tenants T rounds against the shared replica pool.
 
     Every tenant draws its own rewards/costs (its users' queries) from the
@@ -225,19 +346,65 @@ def simulate_fleet(pool: Pool, cfg: FleetConfig, *, T: int,
     tenant-by-tenant regardless of fleet size. ``engine`` selects the
     parametric-LP engine (None -> `relax.DEFAULT_ENGINE`; "bisect" is the
     sequential reference path kept for equivalence tests and benchmarks);
-    ``fw_steps`` the AWC Frank-Wolfe step count (None -> `relax.FW_STEPS`)."""
+    ``fw_steps`` the AWC Frank-Wolfe step count (None -> `relax.FW_STEPS`).
+
+    ``mesh`` shards the tenant axis over the mesh's `(pod, data)` axes via
+    `_scan_fleet_sharded` (bit-identical to the `mesh=None` single-device
+    reference; falls back to it when M doesn't divide the tenant axes).
+
+    ``ckpt_dir``/``ckpt_every`` persist `TenantState` every ``ckpt_every``
+    rounds (the checkpoint step is the round counter); with ``resume``
+    (default) a rerun picks up from the newest checkpoint and returns the
+    remaining rounds t0+1..T (``FleetResult.t0`` marks the resume point),
+    bit-identical to the rounds an uninterrupted run would produce."""
     m = cfg.m
     state0 = init_tenant_state(m, pool.k, keys=keys, seed=seed)
+    t0 = 0
+    if ckpt_dir and resume:
+        latest = ckpt.latest_step(ckpt_dir)
+        if latest is not None:
+            restored, t0 = ckpt.restore(ckpt_dir, state0, step=latest)
+            state0 = jax.tree.map(jnp.asarray, restored)
+            if t0 > T:
+                raise ValueError(f"checkpoint at round {t0} is past T={T}")
     mu = jnp.asarray(pool.mu, jnp.float32)
     mean_cost = jnp.asarray(pool.mean_cost, jnp.float32)
-    state, (rew, cost, act, obs) = _scan_fleet(
-        state0, cfg, mu, mean_cost, T, tuple(pool.reward_levels), unroll,
-        _kinds_present(cfg), engine, fw_steps)
+    levels = tuple(pool.reward_levels)
+    kinds_present = _kinds_present(cfg)
+    axes = fleet_mesh_axes(m, mesh)
+    if axes is not None:    # pre-place so donation reuses device buffers
+        state0 = jax.device_put(state0, jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            _axes_to_specs(TENANT_STATE_AXES, axes), is_leaf=_AXES_LEAF))
+
+    def run(state, a, n):
+        if axes is None:
+            return _scan_fleet(state, cfg, mu, mean_cost, jnp.int32(a), n,
+                               levels, unroll, kinds_present, engine,
+                               fw_steps)
+        return _scan_fleet_sharded(state, cfg, mu, mean_cost, jnp.int32(a),
+                                   n, levels, unroll, kinds_present, engine,
+                                   fw_steps, mesh, axes)
+
+    state, chunks = state0, []
+    bounds = _ckpt_bounds(t0, T, ckpt_every if ckpt_dir else 0)
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        state, out = run(state, a, b - a)
+        chunks.append(jax.tree.map(np.asarray, out))
+        if ckpt_dir and ckpt_every > 0 and b % ckpt_every == 0:
+            ckpt.save(ckpt_dir, b, jax.tree.map(np.asarray, state))
+    if chunks:
+        rew, cost, act, obs = (np.concatenate(parts, axis=0) for parts in
+                               zip(*chunks))
+    else:       # resumed at t0 == T: nothing left to run
+        rew = cost = np.zeros((0, m), np.float32)
+        act = obs = np.zeros((0, m, pool.k), np.float32)
     return FleetResult(reward=np.asarray(rew).T,
                        cost=np.asarray(cost).T,
                        action=np.asarray(act).transpose(1, 0, 2),
                        observed=np.asarray(obs).transpose(1, 0, 2),
-                       state=jax.tree_util.tree_map(np.asarray, state))
+                       state=jax.tree_util.tree_map(np.asarray, state),
+                       t0=t0)
 
 
 def simulate_fleet_driven(pcfgs: Sequence[PolicyConfig], cloud, data, *,
@@ -273,12 +440,18 @@ def simulate_fleet_driven(pcfgs: Sequence[PolicyConfig], cloud, data, *,
             cost[i, t] = log.cost
             action[i, t] = log.action
             observed[i, t] = log.observed
+    prev_mask = np.asarray(action[:, -1], np.float32) if T > 0 \
+        else np.zeros((m, k), np.float32)       # T=0: no round to look at
     state = TenantState(
         stats={key: np.concatenate([np.asarray(s.local.state.stats[key])
                                     for s in fs.tenants])
                for key in fs.tenants[0].local.state.stats},
-        prev_mask=np.asarray(action[:, -1], np.float32),
+        prev_mask=prev_mask,
         t=np.asarray([s.local.t for s in fs.tenants], np.float32),
-        key=np.zeros((m, 2), np.uint32))
+        # the tenants' REAL key rows (generation uses the service's numpy
+        # seeds, but the bandit rows carry live PRNG state — fabricating
+        # zeros here would silently derail any later synthetic continuation)
+        key=np.concatenate([np.asarray(s.local.state.key, np.uint32)
+                            for s in fs.tenants]))
     return FleetResult(reward=reward, cost=cost, action=action,
                        observed=observed, state=state)

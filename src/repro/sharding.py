@@ -24,6 +24,8 @@ RULES: dict = {
     # data-parallel / fsdp axes
     "batch":      (("pod", "data"), ("data",)),
     "fsdp":       (("pod", "data"), ("data",)),       # param biggest dim
+    # fleet tenancy: the M axis of TenantState/FleetConfig (router.fleet)
+    "tenants":    (("pod", "data"), ("data",)),
     # tensor-parallel axes
     "heads":      (("model",),),
     "kv_heads":   (("model",),),

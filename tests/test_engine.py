@@ -287,3 +287,48 @@ def test_service_modes_equivalent(kind, pool):
         # the cascade actually cascaded somewhere (untrained pool => low
         # quality => follow-up arms), or the test is vacuous
         assert any(h.observed.sum() > 1 for h in seq.history)
+
+
+# =============================================== driven-fleet regressions
+def _driven_args(pool):
+    pcfgs = [PolicyConfig(kind=k, k=3, n=2, rho=1e9, delta=0.1)
+             for k in ("suc", "awc")]
+    cloud = SchedulingCloud(pcfgs[0], pool)
+    data = SyntheticLM(DataConfig(vocab=VOCAB, seq_len=8, global_batch=2,
+                                  seed=0))
+    return pcfgs, cloud, data
+
+
+def test_driven_fleet_t0_returns_empty_result(pool):
+    """T=0 used to crash on `action[:, -1]`; it must instead return empty
+    trajectories and a fresh state (no rounds played => no prev_mask)."""
+    from repro.router import fleet
+    pcfgs, cloud, data = _driven_args(pool)
+    res = fleet.simulate_fleet_driven(pcfgs, cloud, data, T=0,
+                                      prompt_len=8, max_new=8, seed=5)
+    assert res.reward.shape == (2, 0) and res.cost.shape == (2, 0)
+    assert res.action.shape == (2, 0, 3) and res.observed.shape == (2, 0, 3)
+    assert res.state.prev_mask.shape == (2, 3)
+    assert (res.state.prev_mask == 0).all() and (res.state.t == 0).all()
+
+
+def test_driven_fleet_carries_real_key_state(pool):
+    """The reconstructed TenantState used to fabricate all-zero PRNG keys;
+    it must carry the tenants' live key rows (a synthetic continuation from
+    this state would otherwise silently collapse onto PRNGKey(0))."""
+    from repro.router import fleet
+    from repro.router.service import FleetService
+    pcfgs, cloud, data = _driven_args(pool)
+    res = fleet.simulate_fleet_driven(pcfgs, cloud, data, T=2,
+                                      prompt_len=8, max_new=8, seed=7)
+    assert res.state.key.any(), "fabricated all-zero keys"
+    # bit-equal to an identically-seeded FleetService run's key rows
+    pcfgs2, cloud2, data2 = _driven_args(pool)
+    fs = FleetService(pcfgs2, cloud2, data2, seed=7, prompt_len=8, max_new=8)
+    fs.run(2)
+    want = np.concatenate([np.asarray(s.local.state.key, np.uint32)
+                           for s in fs.tenants])
+    np.testing.assert_array_equal(res.state.key, want)
+    # prev_mask reflects the last round actually played
+    np.testing.assert_array_equal(res.state.prev_mask,
+                                  res.action[:, -1].astype(np.float32))

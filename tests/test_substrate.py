@@ -99,6 +99,56 @@ def test_checkpoint_gc_keeps_newest(tmp_path):
     assert steps == [4, 5]
 
 
+def test_checkpoint_sweeps_stale_tmp_dirs(tmp_path):
+    """A crashed save leaves .tmp-<step>; the next save (any step) must
+    sweep it — and a retried save of the SAME step must overwrite its own
+    leftover rather than fail on the existing dir."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.zeros(2)}
+    os.makedirs(os.path.join(d, ".tmp-3"))           # crashed step-3 save
+    with open(os.path.join(d, ".tmp-3", "arrays.bin"), "wb") as f:
+        f.write(b"partial")
+    checkpoint.save(d, 3, tree)                      # same-step retry
+    checkpoint.save(d, 4, tree)
+    assert not [x for x in os.listdir(d) if x.startswith(".tmp-")]
+    got, step = checkpoint.restore(d, {"a": np.zeros(2, np.float32)})
+    assert step == 4
+
+
+def test_checkpoint_restore_rejects_treedef_mismatch(tmp_path):
+    """Fewer manifest arrays than restore-target leaves must raise — the
+    old zip() silently truncated and handed back the `like` tail."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        checkpoint.restore(d, {"a": np.zeros(2, np.float32),
+                               "b": np.zeros(3, np.float32)})
+
+
+def test_checkpoint_restore_rejects_truncated_file(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    checkpoint.save(d, 1, tree)
+    path = os.path.join(d, "1", "arrays.bin")
+    with open(path, "rb") as f:
+        buf = f.read()
+    with open(path, "wb") as f:
+        f.write(buf[:-4])                            # drop the last element
+    with pytest.raises(ValueError, match="truncated"):
+        checkpoint.restore(d, {"a": np.zeros(8, np.float32)})
+
+
+def test_checkpoint_restore_rejects_dtype_drift(tmp_path):
+    """uint32 PRNG keys restored into a float32 template (or vice versa)
+    must raise instead of reinterpreting bits."""
+    d = str(tmp_path / "ck")
+    checkpoint.save(d, 1, {"key": jnp.zeros((2, 2), jnp.uint32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        checkpoint.restore(d, {"key": np.zeros((2, 2), np.float32)})
+    got, _ = checkpoint.restore(d, {"key": np.zeros((2, 2), np.uint32)})
+    assert got["key"].dtype == np.uint32
+
+
 # ===================================================================== shard
 class FakeMesh:
     def __init__(self, shape):
@@ -124,6 +174,56 @@ def test_spec_no_double_use_of_axis():
             continue
         flat.extend(part if isinstance(part, tuple) else [part])
     assert len(flat) == len(set(flat))
+
+
+def test_spec_nondivisible_falls_through_to_next_candidate():
+    """vocab: (model,) then (data,) — 51866 doesn't divide 16-way model but
+    does divide the 2-way data axis, so the SECOND candidate applies (not
+    replication)."""
+    mesh = FakeMesh({"data": 2, "model": 16})
+    s = spec_for((51866,), ("vocab",), mesh)  # type: ignore[arg-type]
+    assert tuple(s) == ("data",)
+    # divisible by both: the first candidate wins
+    s2 = spec_for((4096,), ("vocab",), mesh)  # type: ignore[arg-type]
+    assert tuple(s2) == ("model",)
+
+
+def test_spec_joint_pod_data_tenant_axis():
+    """tenants shards jointly over (pod, data) when divisible by the
+    product, falling back to (data,) alone otherwise."""
+    mesh = FakeMesh({"pod": 2, "data": 4})
+    s = spec_for((16, 9), ("tenants", None), mesh)  # type: ignore[arg-type]
+    assert tuple(s) == (("pod", "data"),)           # trailing None trimmed
+    # 12 % 8 != 0 but 12 % 4 == 0 -> the (data,) candidate
+    s2 = spec_for((12, 9), ("tenants", None), mesh)  # type: ignore[arg-type]
+    assert tuple(s2) == ("data",)
+    # 10 divides neither 8 nor 4 -> replicated
+    s3 = spec_for((10, 9), ("tenants", None), mesh)  # type: ignore[arg-type]
+    assert tuple(s3) == ()
+
+
+def test_spec_axis_already_used_excluded():
+    """A mesh axis claimed by an earlier dim is excluded for later dims,
+    including joint-tuple candidates that CONTAIN a used axis."""
+    mesh = FakeMesh({"pod": 2, "data": 4})
+    # batch takes (pod, data); tenants may use neither -> replicated
+    s = spec_for((8, 8), ("batch", "tenants"), mesh)  # type: ignore[arg-type]
+    assert tuple(s) == (("pod", "data"),)
+    # batch only fits (data,) [12 % 8 != 0]; tenants' joint candidate is
+    # blocked by the used data axis, and so is its (data,) fallback
+    s2 = spec_for((12, 8), ("batch", "tenants"), mesh)  # type: ignore[arg-type]
+    assert tuple(s2) == ("data",)
+
+
+def test_spec_trailing_none_trim_keeps_interior_none():
+    mesh = FakeMesh({"data": 4, "model": 4})
+    # interior None (unsharded seq dim) survives; trailing Nones drop
+    s = spec_for((8, 128, 64), ("batch", "seq", "heads"), mesh)  # type: ignore[arg-type]
+    assert tuple(s) == ("data", None, "model")
+    s2 = spec_for((8, 128, 30), ("batch", "seq", "heads"), mesh)  # type: ignore[arg-type]
+    assert tuple(s2) == ("data",)
+    s3 = spec_for((7, 128, 30), ("batch", "seq", "heads"), mesh)  # type: ignore[arg-type]
+    assert tuple(s3) == ()
 
 
 # ===================================================================== engine
