@@ -8,9 +8,14 @@ slot-indexed continuous-batching scheduler; ``--tenants M`` steps M local
 servers against the shared pool so their requests coalesce into per-replica
 decode batches (the throughput case — see benchmarks/serve_throughput.py).
 
+``--fault-rate`` arms the deterministic chaos layer (serving.faults): a
+seeded fraction of attempts fail (or crash with ``--crash-on-decode``),
+failures feed the bandit as zero-reward observations at the attempted-work
+cost, and per-replica health/quarantine stats print at the end.
+
   PYTHONPATH=src python -m repro.launch.serve --kind awc --rounds 30 \
       --pool h2o-danube-3-4b,mamba2-780m,starcoder2-7b --train-first 1 \
-      --dispatch continuous --tenants 4
+      --dispatch continuous --tenants 4 --fault-rate 0.2 --fault-seed 7
 """
 from __future__ import annotations
 
@@ -79,6 +84,17 @@ def main(argv=None):
     ap.add_argument("--tenants", type=int, default=1,
                     help="local servers sharing the pool; >1 coalesces "
                          "tenant requests into shared decode batches")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos mode: per-attempt injected failure "
+                         "probability (seeded, reproducible)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--crash-on-decode", action="store_true",
+                    help="doomed attempts crash the engine mid-decode "
+                         "instead of failing cleanly (exercises recovery)")
+    ap.add_argument("--spike-prob", type=float, default=0.0,
+                    help="probability of an injected admission latency "
+                         "spike per attempt")
+    ap.add_argument("--max-retries", type=int, default=2)
     args = ap.parse_args(argv)
 
     names = args.pool.split(",")
@@ -90,16 +106,25 @@ def main(argv=None):
     pcfg = PolicyConfig(kind=args.kind, k=len(names), n=args.n,
                         rho=args.rho, delta=0.1)
     cloud = SchedulingCloud(pcfg, replicas)
+    fault_kw = {}
+    if args.fault_rate > 0 or args.spike_prob > 0:
+        from repro.serving.faults import FaultPlan, HealthPolicy
+        fault_kw = dict(
+            fault_plan=FaultPlan(fault_seed=args.fault_seed,
+                                 fail_prob=args.fault_rate,
+                                 crash_on_decode=args.crash_on_decode,
+                                 spike_prob=args.spike_prob),
+            health=HealthPolicy(max_retries=args.max_retries))
     if args.tenants > 1:
         fs = FleetService(pcfg, cloud, data, n_tenants=args.tenants,
                           prompt_len=8, max_new=8,
-                          batch_size=args.batch_size)
+                          batch_size=args.batch_size, **fault_kw)
         svc = fs.tenants[0]
         runner = fs
     else:
         svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
                               batch_size=args.batch_size,
-                              dispatch=args.dispatch)
+                              dispatch=args.dispatch, **fault_kw)
         runner = svc
     t0 = time.time()
     runner.run(args.rounds)
@@ -113,6 +138,12 @@ def main(argv=None):
     print(f"mean observed reward {s['mean_observed_reward']:.3f}  "
           f"mean cost {s['mean_cost']:.4f}  violation {s['violation']:.4f}")
     print("selections:", dict(zip(names, svc.local.t_mu.astype(int))))
+    if fault_kw and svc.sched is not None:
+        failed = sum(int(h.failed.sum()) for h in svc.history
+                     if h.failed is not None)
+        print(f"chaos: {failed} terminal failure(s) observed by tenant 0")
+        for nm, st in zip(names, svc.sched.stats()):
+            print(f"  {nm}: {st}")
     return s
 
 

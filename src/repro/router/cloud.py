@@ -54,7 +54,9 @@ class SchedulingCloud:
     """One replica pool + rounding service, shared across tenants."""
 
     def __init__(self, pcfg: PolicyConfig, replicas: Sequence[Replica]):
-        assert len(replicas) == pcfg.k
+        if len(replicas) != pcfg.k:     # not an assert: must survive -O
+            raise ValueError(f"pool has {len(replicas)} replicas but the "
+                             f"policy expects k={pcfg.k}")
         self.pcfg = pcfg
         self.replicas = list(replicas)
         # the pool is immutable: pricing (and anything derived from it, like
@@ -76,16 +78,40 @@ class SchedulingCloud:
                                       n, kind_ix))
 
     # ------------------------------------------------------------- rounding
-    def select(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    def select(self, z: np.ndarray, rng: np.random.Generator,
+               available: Optional[np.ndarray] = None) -> np.ndarray:
         """Discretization rounding -> boolean action mask (K,).
 
         The M = 1 case routes through the same jitted `round_batch` program
         the fleet uses (pairwise rounding + `rounding.pad_to_n_dyn`); the
-        numpy reference is retained as `select_np`."""
+        numpy reference is retained as `select_np`.
+
+        ``available`` (K,) bool masks quarantined replicas out of the
+        selection (failover): z̃ is zeroed on unavailable arms and
+        renormalized over the healthy subset (preserving the fractional
+        mass up to the healthy count, each entry clipped to [0, 1]) before
+        rounding, and the rounded action is intersected with the mask so
+        the base-matroid padding can never resurrect a dead arm. A None or
+        all-True mask takes the exact unmasked path — bit-equal to a run
+        with no fault layer at all."""
+        z = np.asarray(z, np.float32)
+        if available is not None:
+            available = np.asarray(available, bool)
+            if available.all():
+                available = None          # healthy pool: unmasked path
+        if available is not None:
+            zq = np.where(available, z, 0.0).astype(np.float32)
+            s = float(zq.sum())
+            if s > 0.0:
+                target = min(float(z.sum()), float(available.sum()))
+                zq = np.clip(zq * (target / s), 0.0, 1.0).astype(np.float32)
+            z = zq
         key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
-        mask = self.select_batch(np.asarray(z, np.float32)[None, :],
-                                 key[None])[0]
-        return np.asarray(mask, bool)
+        mask = self.select_batch(z[None, :], key[None])[0]
+        mask = np.asarray(mask, bool)
+        if available is not None:
+            mask &= available
+        return mask
 
     def select_np(self, z: np.ndarray, rng: np.random.Generator) -> np.ndarray:
         """Retained host-side numpy reference for `select`."""
@@ -115,13 +141,19 @@ class SchedulingCloud:
         return out, self.realized_cost(arm, prompts, out)
 
     def make_scheduler(self, *, n_slots: int = 32, chunk: int = 8,
-                       max_out: Optional[int] = None):
+                       max_out: Optional[int] = None, fault_plan=None,
+                       health=None, tick_budget: Optional[int] = None):
         """Continuous-batching bridge over this pool: one `ReplicaRunner`
-        per replica, shared by every tenant submitting to this cloud."""
+        per replica, shared by every tenant submitting to this cloud.
+        ``fault_plan`` / ``health`` (serving.faults) arm the chaos layer;
+        ``tick_budget`` bounds each drain (None keeps the default)."""
         from repro.serving.scheduler import ContinuousScheduler, ReplicaRunner
+        kw = {} if tick_budget is None else {"tick_budget": tick_budget}
         return ContinuousScheduler(
             [ReplicaRunner(r.engine, n_slots=n_slots, chunk=chunk,
-                           max_out=max_out) for r in self.replicas])
+                           max_out=max_out, replica_ix=i,
+                           fault_plan=fault_plan, health=health)
+             for i, r in enumerate(self.replicas)], **kw)
 
 
 def _pad_to_n_np(mask: np.ndarray, z: np.ndarray, n: int) -> np.ndarray:

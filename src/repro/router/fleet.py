@@ -423,6 +423,11 @@ def simulate_fleet_driven(pcfgs: Sequence[PolicyConfig], cloud, data, *,
     the same Eq.-(6) updates. Returns a `FleetResult` whose ``reward`` is
     the mean *observed* quality per round (the synthetic path reports
     expected set reward — the two are comparable in trend, not in value).
+
+    ``service_kw`` passes through to `FleetService` — in particular
+    ``fault_plan=``/``health=`` (serving.faults) run the driven fleet
+    under deterministic chaos: injected failures arrive as zero-reward
+    observations and quarantined replicas are masked out of selection.
     """
     from repro.router.service import FleetService   # lazy: avoids cycle
     fs = FleetService(list(pcfgs), cloud, data, n_slots=n_slots, chunk=chunk,

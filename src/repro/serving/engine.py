@@ -224,10 +224,16 @@ class Engine:
         pos0 = M.prefill_len(self.cfg, prompt_len)
         mn = np.broadcast_to(np.asarray(max_new, np.int32),
                              (slot_ix.shape[0],))
-        assert mn.max() <= state.out.shape[1], (max_new, state.out.shape)
+        # real exceptions, not asserts: these guard serving control flow
+        # and must keep firing under `python -O`
+        if mn.max() > state.out.shape[1]:
+            raise ValueError(f"max_new {max_new} exceeds the slot out "
+                             f"buffer {state.out.shape}")
         if self.cfg.sliding_window is None and self.cfg.family != "ssm":
-            assert pos0 + int(mn.max()) <= self.max_len, \
-                (prompt_len, max_new, self.max_len)
+            if pos0 + int(mn.max()) > self.max_len:
+                raise ValueError(
+                    f"prompt_len {prompt_len} + max_new {max_new} exceeds "
+                    f"the engine's max_len {self.max_len}")
         if rkeys is None:
             rkeys = _row_keys(jax.random.PRNGKey(seed), slot_ix.shape[0])
         return self._admit_jit(state, slot_ix, lg, cache_slice, rkeys,

@@ -1,0 +1,445 @@
+"""Fault-tolerant serving: deterministic injection, health machine,
+failure-aware bandit feedback.
+
+The contract under test, layer by layer:
+
+  faults    — `FaultPlan` draws are pure functions of
+              (fault_seed, replica, rid, attempt); a disabled plan is
+              inert.
+  scheduler — failed attempts retry with backoff and terminal failures
+              complete with ok=False; engine crashes rebuild the slot
+              state and requeue; the health machine walks
+              healthy -> degraded -> quarantined -> probation -> healthy;
+              drain terminates under ANY fault pattern (tick budget).
+  router    — a failed completion is a zero-reward observation at the
+              attempted-work cost, the AWC cascade advances on failure,
+              quarantined arms are masked (renormalized z̃) and restored
+              on recovery, and a fixed fault seed reproduces the whole
+              trajectory bit-for-bit.
+  and the no-fault invariant: requests that happen to succeed inside a
+  chaos run still produce BIT-IDENTICAL tokens to `Engine.generate`.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.policies import PolicyConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.router.cloud import Replica, SchedulingCloud
+from repro.router.service import FleetService, MultiLLMService
+from repro.serving.engine import Engine
+from repro.serving.faults import (FaultPlan, Health, HealthPolicy, NO_FAULT)
+from repro.serving.scheduler import (ContinuousScheduler, ReplicaRunner,
+                                     Request)
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return dataclasses.replace(get_config("h2o-danube-3-4b").reduced(),
+                               vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def dense_engine(dense_cfg):
+    params = M.init_params(dense_cfg, jax.random.PRNGKey(0))
+    return Engine(dense_cfg, params, max_len=32, eos_id=0, temperature=0.7)
+
+
+@pytest.fixture(scope="module")
+def pool(dense_cfg):
+    return [Replica(f"m{i}",
+                    Engine(dense_cfg,
+                           M.init_params(dense_cfg, jax.random.PRNGKey(i)),
+                           max_len=32, eos_id=0, temperature=0.7),
+                    0.001 * (1 + i))
+            for i in range(3)]
+
+
+def _requests(n, *, b=2, s=6, max_new=8, seed0=0, arm=0):
+    rng = np.random.default_rng(17)
+    return [Request(tenant=0, arm=arm, prompts=rng.integers(1, VOCAB, (b, s)),
+                    max_new=max_new, seed=seed0 + i) for i in range(n)]
+
+
+def _drain(engine, requests, *, plan=None, health=None, n_slots=4, chunk=3,
+           tick_budget=100_000):
+    runner = ReplicaRunner(engine, n_slots=n_slots, chunk=chunk,
+                           replica_ix=0, fault_plan=plan, health=health)
+    got = {}
+    sched = ContinuousScheduler(
+        [runner], on_complete=lambda c: got.__setitem__(c.request.rid, c),
+        tick_budget=tick_budget)
+    for r in requests:
+        sched.submit(r)
+    sched.drain()
+    return runner, sched, got
+
+
+# ================================================================ FaultPlan
+def test_faultplan_deterministic_and_disabled():
+    plan = FaultPlan(fault_seed=5, fail_prob=0.5, spike_prob=0.3)
+    again = FaultPlan(fault_seed=5, fail_prob=0.5, spike_prob=0.3)
+    draws = [plan.draw(r, i, a) for r in range(2) for i in range(20)
+             for a in range(1, 3)]
+    assert draws == [again.draw(r, i, a) for r in range(2) for i in range(20)
+                     for a in range(1, 3)]
+    assert any(d.fails for d in draws) and any(not d.fails for d in draws)
+    assert any(d.spike > 0 for d in draws)
+    # a different seed gives a different schedule
+    other = FaultPlan(fault_seed=6, fail_prob=0.5, spike_prob=0.3)
+    assert [other.draw(0, i, 1) for i in range(20)] != \
+        [plan.draw(0, i, 1) for i in range(20)]
+    # disabled plan draws nothing, ever
+    off = FaultPlan(fault_seed=5, fail_prob=0.0)
+    assert not off.enabled
+    assert all(off.draw(r, i, 1) == NO_FAULT
+               for r in range(3) for i in range(50))
+
+
+def test_faultplan_per_replica_and_window():
+    plan = FaultPlan(fault_seed=1, fail_prob=[1.0, 0.0], rid_window=(2, 4))
+    assert [plan.draw(0, i, 1).fails for i in range(6)] == \
+        [False, False, True, True, False, False]
+    assert not any(plan.draw(1, i, 1).fails for i in range(6))
+
+
+# ======================================================== retries + failure
+def test_injected_failure_retries_then_succeeds(dense_engine):
+    """An attempt doomed by the plan retries (new attempt, new draw) and
+    the eventual success is BIT-EQUAL to the no-fault reference — faults
+    never perturb sampling keys."""
+    reqs = _requests(4)
+    # fail every first attempt, let retries through: attempt є {1} doomed
+    class FirstAttemptPlan(FaultPlan):
+        def draw(self, replica, rid, attempt):
+            return dataclasses.replace(NO_FAULT, fails=attempt == 1)
+    plan = FirstAttemptPlan(fault_seed=0, fail_prob=1.0)
+    runner, _, got = _drain(dense_engine, reqs, plan=plan,
+                            health=HealthPolicy(max_retries=2,
+                                                quarantine_after=100))
+    assert set(got) == {r.rid for r in reqs}
+    for r in reqs:
+        comp = got[r.rid]
+        assert comp.ok and comp.attempts == 2
+        want = dense_engine.generate(r.prompts, r.max_new, seed=r.seed)
+        np.testing.assert_array_equal(comp.result.tokens, want.tokens)
+        np.testing.assert_array_equal(comp.result.out_lens, want.out_lens)
+        np.testing.assert_array_equal(comp.result.logprobs, want.logprobs)
+    assert runner.n_retries == 4 and runner.n_failures == 4
+    assert sorted(runner._free) == list(range(4))
+
+
+def test_retries_exhausted_is_failed_completion(dense_engine):
+    reqs = _requests(2)
+    plan = FaultPlan(fault_seed=0, fail_prob=1.0, fail_tick_max=1)
+    runner, _, got = _drain(
+        dense_engine, reqs, plan=plan,
+        health=HealthPolicy(max_retries=1, quarantine_after=100))
+    for r in reqs:
+        comp = got[r.rid]
+        assert not comp.ok and comp.attempts == 2
+        assert comp.error == "injected fault"
+        # attempted-work accounting: the eos-filled result carries the
+        # partial decode progress in out_lens (may be 0 for tick-0 faults)
+        assert comp.result.tokens.shape == (2, r.max_new)
+        assert (comp.result.tokens == dense_engine.eos_id).all()
+    assert runner.busy is False
+    assert sorted(runner._free) == list(range(4))
+    assert not np.asarray(runner.state.active).any()
+
+
+def test_crash_recovery_rebuilds_and_requeues(dense_engine):
+    """crash_on_decode: the doomed attempt raises from the decode path;
+    the runner rebuilds SlotState, releases every orphaned slot, requeues
+    the co-resident victims, and everything still completes."""
+    reqs = _requests(4, max_new=6)
+    plan = FaultPlan(fault_seed=3, fail_prob=0.5, crash_on_decode=True,
+                     fail_tick_max=1)
+    runner, _, got = _drain(dense_engine, reqs, plan=plan, n_slots=8,
+                            health=HealthPolicy(max_retries=3,
+                                                quarantine_after=100))
+    assert runner.n_crashes > 0, "plan must actually crash (seed choice)"
+    assert set(got) == {r.rid for r in reqs}
+    for r in reqs:
+        comp = got[r.rid]
+        if comp.ok:       # survivors are bit-equal to the reference
+            want = dense_engine.generate(r.prompts, r.max_new, seed=r.seed)
+            np.testing.assert_array_equal(comp.result.tokens, want.tokens)
+    # slot state fully rebuilt + drained
+    assert sorted(runner._free) == list(range(8))
+    assert not np.asarray(runner.state.active).any()
+
+
+def test_timeout_deadline_with_latency_spikes(dense_engine):
+    """spike_prob delays admission; a tight timeout_ticks deadline expires
+    the attempt (in queue or resident) and charges a retry."""
+    reqs = _requests(3, max_new=8)
+    plan = FaultPlan(fault_seed=2, fail_prob=0.0, spike_prob=1.0,
+                     spike_ticks=10)
+    runner, _, got = _drain(
+        dense_engine, reqs, plan=plan,
+        health=HealthPolicy(max_retries=0, timeout_ticks=5,
+                            quarantine_after=100))
+    assert all(not got[r.rid].ok for r in reqs)
+    assert all("deadline" in got[r.rid].error for r in reqs)
+    assert runner.n_failures == 3
+    assert not runner.busy
+
+
+# =========================================================== health machine
+def test_quarantine_probation_readmit_cycle(dense_engine):
+    """A transient outage (always-fail inside a submission window) walks
+    the full machine: healthy -> degraded -> quarantined. Work pending at
+    the moment of quarantine is purged (fail fast, never hang); work
+    submitted afterwards is held and served as probation probes, whose
+    successes readmit the replica; post-outage requests succeed
+    bit-equal."""
+    hp = HealthPolicy(max_retries=0, degrade_after=1, quarantine_after=2,
+                      probation_ticks=3, readmit_successes=2)
+    plan = FaultPlan(fault_seed=0, fail_prob=1.0, fail_tick_max=0,
+                     rid_window=(0, 3))
+    runner = ReplicaRunner(dense_engine, n_slots=2, chunk=3, replica_ix=0,
+                           fault_plan=plan, health=hp)
+    got = {}
+    sched = ContinuousScheduler(
+        [runner], on_complete=lambda c: got.__setitem__(c.request.rid, c))
+    bad = _requests(3, seed0=0)
+    for r in bad:
+        sched.submit(r)
+    sched.drain()
+    assert runner.health_state is Health.QUARANTINED
+    assert all(not got[r.rid].ok for r in bad)
+    # the third request was still queued when the outage tripped: purged
+    assert got[bad[2].rid].error == "replica quarantined"
+    # submissions while quarantined are held until probation opens, then
+    # served as probes; readmit_successes probes restore the replica
+    probes = _requests(3, seed0=100)
+    for r in probes:
+        sched.submit(r)
+    sched.drain()
+    assert runner.health_state is Health.HEALTHY, runner.health_log
+    for r in probes:
+        comp = got[r.rid]
+        assert comp.ok
+        want = dense_engine.generate(r.prompts, r.max_new, seed=r.seed)
+        np.testing.assert_array_equal(comp.result.tokens, want.tokens)
+    states = [s for _, s in runner.health_log]
+    assert states == [Health.DEGRADED, Health.QUARANTINED, Health.PROBATION,
+                      Health.HEALTHY]
+
+
+def test_probation_failure_requarantines(dense_engine):
+    hp = HealthPolicy(max_retries=0, quarantine_after=1, probation_ticks=2,
+                      readmit_successes=1)
+    plan = FaultPlan(fault_seed=0, fail_prob=1.0, fail_tick_max=0,
+                     rid_window=(0, 2))
+    runner = ReplicaRunner(dense_engine, n_slots=4, chunk=3, replica_ix=0,
+                           fault_plan=plan, health=hp)
+    sched = ContinuousScheduler([runner], on_complete=lambda c: None)
+    sched.submit(_requests(1, seed0=0)[0])
+    sched.drain()
+    assert runner.health_state is Health.QUARANTINED
+    # rid 1 still inside the fault window: the probe fails -> re-quarantine
+    sched.submit(_requests(1, seed0=1)[0])
+    sched.drain()
+    assert runner.health_state is Health.QUARANTINED
+    assert runner.n_quarantines == 2
+
+
+# ======================================================== drain termination
+def test_drain_always_terminates_under_heavy_faults(dense_engine):
+    """p=0.6 + crashes + spikes + deadlines: every request resolves to
+    exactly one completion and the drain loop exits on its own."""
+    reqs = _requests(6, max_new=6)
+    plan = FaultPlan(fault_seed=11, fail_prob=0.6, crash_on_decode=True,
+                     spike_prob=0.3, spike_ticks=3)
+    runner, sched, got = _drain(
+        dense_engine, reqs, plan=plan, n_slots=4,
+        health=HealthPolicy(max_retries=2, timeout_ticks=40,
+                            quarantine_after=4, probation_ticks=4))
+    assert set(got) == {r.rid for r in reqs}
+    assert not sched.busy
+    assert sched.last_drain_ticks < 100_000
+
+
+def test_drain_tick_budget_force_fails(dense_engine):
+    """An exhausted tick budget aborts all outstanding work: one ok=False
+    completion each, no wedged queue, drain returns."""
+    reqs = _requests(4)
+    plan = FaultPlan(fault_seed=0, fail_prob=1.0)  # nothing ever succeeds
+    runner, sched, got = _drain(
+        dense_engine, reqs, plan=plan, tick_budget=3,
+        health=HealthPolicy(max_retries=1000, backoff_cap=1,
+                            quarantine_after=10**9))
+    assert set(got) == {r.rid for r in reqs}
+    assert all(not c.ok for c in got.values())
+    assert any("tick budget" in c.error for c in got.values())
+    assert not sched.busy and not runner.busy
+
+
+# ===================================================== service-level chaos
+def _service_args(pool, kind="suc"):
+    pcfg = PolicyConfig(kind=kind, k=3, n=2, rho=1e9, delta=0.1)
+    cloud = SchedulingCloud(pcfg, pool)
+    data = SyntheticLM(DataConfig(vocab=VOCAB, seq_len=8, global_batch=2,
+                                  seed=0))
+    return pcfg, cloud, data
+
+
+@pytest.mark.parametrize("kind", ["suc", "awc"])
+def test_chaos_run_completes_and_learns(kind, pool):
+    """p=0.5 per-request failures: every round completes (no wedged
+    inflight), failures land as observed zero-reward feedback at nonzero
+    cost, and the AWC cascade advances past failed arms."""
+    pcfg, cloud, data = _service_args(pool, kind)
+    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                          seed=3, dispatch="continuous",
+                          fault_plan=FaultPlan(fault_seed=9, fail_prob=0.5),
+                          health=HealthPolicy(max_retries=1,
+                                              quarantine_after=100))
+    logs = svc.run(8)
+    assert len(logs) == 8 and svc._cur is None
+    failed = np.array([l.failed for l in logs])
+    observed = np.array([l.observed for l in logs])
+    assert failed.any(), "p=0.5 with 1 retry must produce terminal failures"
+    # failures are observations: reward 0, cost > 0 (attempted work)
+    for l in logs:
+        assert (l.observed[l.failed]).all()
+        assert (l.rewards[l.failed] == 0.0).all()
+    assert (failed <= observed).all()
+    # the bandit saw every failure: t_mu counts include failed arms
+    assert svc.local.t_mu.sum() == observed.sum()
+
+
+def test_failed_cost_charges_attempted_work(pool):
+    """All attempts fail -> every observation is reward 0 at >= prompt
+    cost (prompt tokens were shipped even when no token decoded)."""
+    pcfg, cloud, data = _service_args(pool)
+    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                          seed=3, dispatch="continuous",
+                          fault_plan=FaultPlan(fault_seed=1, fail_prob=1.0),
+                          health=HealthPolicy(max_retries=0,
+                                              quarantine_after=10**9))
+    log = svc.step()
+    assert log.failed.sum() == log.observed.sum() > 0
+    arms = np.flatnonzero(log.observed)
+    prompt_cost = 2 * 8 * cloud.prices[arms]      # B x S x price
+    assert (log.rewards[arms] == 0).all()
+    assert log.cost > 0
+    costs = np.array([svc.local.c_hat[a] for a in arms])
+    assert (costs >= prompt_cost - 1e-12).all()
+
+
+def test_quarantined_arm_masked_from_selection_and_restored(pool):
+    """Failover: once a replica quarantines, `cloud.select` masks it
+    (renormalized z̃) so later rounds never pick it; after probation
+    readmission it becomes selectable again."""
+    pcfg, cloud, data = _service_args(pool)
+    # replica 0: hard outage for its first 4 submissions, then healthy
+    # (each quarantine -> probation cycle burns roughly one submission)
+    plan = FaultPlan(fault_seed=0, fail_prob=[1.0, 0.0, 0.0],
+                     fail_tick_max=0, rid_window=(0, 4))
+    hp = HealthPolicy(max_retries=0, quarantine_after=2,
+                      probation_ticks=2, readmit_successes=1)
+    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                          seed=5, dispatch="continuous", fault_plan=plan,
+                          health=hp)
+    runner0 = svc.sched.runners[0]
+    logs = svc.run(16)
+    assert len(logs) == 16
+    assert runner0.n_quarantines >= 1, "outage must quarantine replica 0"
+    assert runner0.health_state is Health.HEALTHY, runner0.health_log
+    # while quarantined, selection never includes arm 0
+    q_rounds = [i for i, l in enumerate(logs)
+                if not l.action[0] and l.action.sum() == 2]
+    assert q_rounds, "masked rounds must keep selecting healthy arms"
+    # after recovery the arm is selectable again (pool restored): some
+    # later round picks it and it succeeds
+    post = [l for l in logs[max(q_rounds):] if l.action[0]]
+    assert post, "recovered arm never reselected"
+    assert any(l.observed[0] and not l.failed[0] for l in post)
+
+
+def test_availability_change_invalidates_cached_mask(pool):
+    """App.-E.3 async batching caches the action between syncs; a
+    quarantine mid-batch must invalidate the cache instead of re-serving
+    a mask that routes to the dead arm."""
+    pcfg, cloud, data = _service_args(pool)
+    plan = FaultPlan(fault_seed=0, fail_prob=[1.0, 0.0, 0.0],
+                     fail_tick_max=0, rid_window=(0, 10**9))
+    hp = HealthPolicy(max_retries=0, quarantine_after=1,
+                      probation_ticks=10**6)
+    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                          seed=5, dispatch="continuous", batch_size=4,
+                          fault_plan=plan, health=hp)
+    logs = svc.run(6)
+    first_q = next(i for i, l in enumerate(logs) if l.failed[0])
+    for l in logs[first_q + 1:]:
+        assert not l.action[0], "cached mask kept routing to a dead arm"
+
+
+def test_chaos_trajectory_reproducible(pool):
+    """Retry determinism: the same fault seed reproduces the entire
+    service trajectory (rewards, costs, failures, bandit stats) bit for
+    bit across fresh runs."""
+    def run():
+        pcfg, cloud, data = _service_args(pool, "awc")
+        svc = MultiLLMService(
+            pcfg, cloud, data, prompt_len=8, max_new=8, seed=3,
+            dispatch="continuous",
+            fault_plan=FaultPlan(fault_seed=21, fail_prob=0.4,
+                                 spike_prob=0.2, spike_ticks=2),
+            health=HealthPolicy(max_retries=2, quarantine_after=3,
+                                probation_ticks=4))
+        logs = svc.run(6)
+        return logs, np.asarray(svc.local.mu_hat), np.asarray(svc.local.c_hat)
+    la, mua, ca = run()
+    lb, mub, cb = run()
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(a.action, b.action)
+        np.testing.assert_array_equal(a.observed, b.observed)
+        np.testing.assert_array_equal(a.rewards, b.rewards)
+        np.testing.assert_array_equal(a.failed, b.failed)
+        assert a.cost == b.cost
+    np.testing.assert_array_equal(mua, mub)
+    np.testing.assert_array_equal(ca, cb)
+
+
+def test_sequential_fault_injection(pool):
+    """The sequential reference accepts the same plan: injected failures
+    become zero-reward observations at prompt cost and the AWC cascade
+    advances (failure == unsatisfied user)."""
+    pcfg, cloud, data = _service_args(pool, "awc")
+    svc = MultiLLMService(pcfg, cloud, data, prompt_len=8, max_new=8,
+                          seed=3, dispatch="sequential",
+                          fault_plan=FaultPlan(fault_seed=4, fail_prob=0.5))
+    logs = svc.run(8)
+    failed = np.array([l.failed for l in logs])
+    assert failed.any()
+    for l in logs:
+        assert (l.rewards[l.failed] == 0.0).all()
+        assert (l.observed[l.failed]).all()
+    # a failed cheap arm still cascades to pricier arms
+    assert any(l.failed.any() and l.observed.sum() > 1 for l in logs)
+
+
+def test_fleet_chaos_all_rounds_drain(pool):
+    """FleetService under p=0.3 + crashes: every tenant's every round
+    finishes with inflight 0 (the wedge the inflight-leak fix and crash
+    recovery exist to prevent)."""
+    pcfg, cloud, data = _service_args(pool)
+    fs = FleetService(pcfg, cloud, data, n_tenants=4, seed=0,
+                      prompt_len=8, max_new=8,
+                      fault_plan=FaultPlan(fault_seed=7, fail_prob=0.3,
+                                           crash_on_decode=True),
+                      health=HealthPolicy(max_retries=2))
+    logs = fs.run(5)
+    assert len(logs) == 5
+    for svc in fs.tenants:
+        assert svc._cur is None and len(svc.history) == 5
